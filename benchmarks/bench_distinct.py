@@ -1,0 +1,82 @@
+"""DISTINCT pruning benchmarks: Fig 9a + Theorem 1 + Theorem 4 (Ex. 2/8).
+
+Fig 9a setting: zipf-ish duplicated stream; unpruned fraction vs (w, d)
+for LRU vs FIFO vs OPT. Theorem checks validate the paper's bounds
+empirically — each row's `derived` field records bound vs measured.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (distinct_prune, opt_keep_distinct, thm1_bound,
+                        fingerprint_bits_thm4, hash_mod)
+from repro.kernels import ops as kops
+
+from .common import emit, time_fn
+
+
+def _stream(m: int, D: int, seed: int = 0) -> jnp.ndarray:
+    """Random-order stream with D distinct values (Thm 1's regime)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, 1 << 30, D).astype(np.uint32)
+    return jnp.asarray(vals[rng.integers(0, D, m)])
+
+
+def fig9a():
+    m, D = 200_000, 15_000
+    s = _stream(m, D)
+    opt = opt_keep_distinct(s)
+    opt_un = float(opt.mean())
+    for policy in ("lru", "fifo"):
+        for d, w in ((1024, 1), (1024, 2), (4096, 2), (4096, 4)):
+            fn = lambda: distinct_prune(s, d=d, w=w, policy=policy)
+            us = time_fn(lambda: fn().keep)
+            keep = fn().keep
+            unpruned = float(keep.mean())
+            emit(f"fig9a_distinct_{policy}_d{d}_w{w}", us,
+                 f"unpruned={unpruned:.4f};opt={opt_un:.4f}")
+    # kernel datapoint (block semantics)
+    us = time_fn(lambda: kops.distinct_prune(s, d=4096, w=2, block=256))
+    keep = kops.distinct_prune(s, d=4096, w=2, block=256)
+    emit("fig9a_distinct_kernel_d4096_w2", us,
+         f"unpruned={float(keep.mean()):.4f}")
+
+
+def thm1():
+    m, D = 120_000, 15_000
+    s = _stream(m, D, seed=1)
+    for d, w in ((1000, 24), (1000, 4), (4096, 2)):
+        keep = distinct_prune(s, d=d, w=w, policy="lru").keep
+        opt = opt_keep_distinct(s)
+        dup_total = int((~opt).sum())
+        dup_pruned = int(((~keep) & (~opt)).sum())
+        frac = dup_pruned / dup_total
+        bound = thm1_bound(D, d, w)
+        ok = frac >= bound * 0.95  # 5% slack: finite-sample
+        emit(f"thm1_d{d}_w{w}", 0.0,
+             f"measured={frac:.3f};bound={bound:.3f};holds={ok}")
+
+
+def thm4():
+    d, delta = 1000, 1e-4
+    for D in (10_000, 500_000):
+        f = fingerprint_bits_thm4(d, D, delta)
+        # empirical same-row fingerprint collision probability at f bits
+        rng = np.random.default_rng(2)
+        vals = jnp.asarray(rng.integers(1, 1 << 62, D).astype(np.uint64)
+                           .astype(np.uint32))
+        rows = np.asarray(hash_mod(vals, d, seed=3))
+        fps = np.asarray(vals) & ((1 << min(f, 32)) - 1)
+        coll = 0
+        for r in range(d):
+            sub = fps[rows == r]
+            coll += len(sub) - len(np.unique(sub))
+        emit(f"thm4_D{D}", 0.0,
+             f"f_bits={f};same_row_collisions={coll};delta={delta}")
+
+
+def run():
+    fig9a()
+    thm1()
+    thm4()

@@ -1,0 +1,46 @@
+"""Table 2 reproduction: per-algorithm switch resource footprints +
+multi-query packing (§6) feasibility on a Tofino-like profile."""
+from __future__ import annotations
+
+from repro.core import SwitchProfile, footprint, pack_queries, rule_count
+
+from .common import emit
+
+
+def run():
+    rows = [
+        ("distinct_fifo", dict(d=4096, w=2)),
+        ("distinct_lru", dict(d=4096, w=2)),
+        ("skyline_sum", dict(D=2, w=10)),
+        ("skyline_aph", dict(D=2, w=10)),
+        ("topn_det", dict(w=4)),
+        ("topn_rand", dict(d=4096, w=4)),
+        ("groupby", dict(d=4096, w=8)),
+        ("join_bf", dict(M=4 << 20, H=3)),
+        ("having", dict(d=3, w=1024)),
+        ("filter", dict(num_predicates=2)),
+    ]
+    for name, params in rows:
+        fp = footprint(name, **params)
+        emit(f"table2_{name}", 0.0,
+             f"stages={fp.stages};alus={fp.alus};sram={fp.sram_bytes};"
+             f"tcam={fp.tcam};rules={rule_count(name)}")
+    # §6: pack a BigData-benchmark workload onto one pipeline
+    prof = SwitchProfile(stages=32, alus_per_stage=16,
+                         sram_per_stage_bytes=6 << 20)
+    workload = {
+        "filter": footprint("filter", num_predicates=2),
+        "groupby": footprint("groupby", d=4096, w=8),
+        "distinct": footprint("distinct_lru", d=4096, w=2),
+        "topn": footprint("topn_rand", d=4096, w=4),
+        "join": footprint("join_bf", M=4 << 20, H=3),
+    }
+    plan = pack_queries(workload, prof)
+    emit("sec6_packing", 0.0,
+         f"feasible={plan.feasible};stages_used={plan.stages_used};"
+         f"queries={len(plan.placements)}")
+    total_rules = sum(rule_count(n) for n in
+                      ("filter", "groupby", "distinct_lru", "topn_rand",
+                       "join_bf"))
+    emit("sec7_rules_per_workload", 0.0,
+         f"rules={total_rules};paper_says<100")

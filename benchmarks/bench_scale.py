@@ -1,0 +1,51 @@
+"""Pruning rate vs data scale: Fig 9d-f (+ JOIN/HAVING scale behaviour).
+
+DISTINCT / TOP-N / SKYLINE improve with scale; JOIN / HAVING degrade
+(Bloom fills up; Count-Min accumulates false positives) — the paper's
+§8.3 asymmetry, reproduced here on synthetic streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (distinct_prune, having_prune, join_prune,
+                        skyline_prune, topn_rand_prune, thm2_w)
+
+from .common import emit
+
+
+def run():
+    scales = (20_000, 80_000, 320_000)
+    rng = np.random.default_rng(0)
+    D = 15_000
+    base = rng.integers(1, 1 << 30, D).astype(np.uint32)
+    full = jnp.asarray(base[rng.integers(0, D, scales[-1])])
+    for m in scales:
+        keep = distinct_prune(full[:m], d=4096, w=2).keep
+        emit(f"fig9d_distinct_m{m}", 0.0, f"unpruned={float(keep.mean()):.4f}")
+    N = 250
+    perm = jnp.asarray(rng.permutation(scales[-1]).astype(np.float32) + 1)
+    w = thm2_w(4096, N, 1e-4)
+    for m in scales:
+        keep = topn_rand_prune(perm[:m], d=4096, w=w).keep
+        emit(f"fig9e_topn_m{m}", 0.0, f"unpruned={float(keep.mean()):.5f}")
+    pts = jnp.asarray(rng.integers(1, 1 << 16, (scales[-1], 2)).astype(np.float32))
+    for m in scales:
+        keep = skyline_prune(pts[:m], w=10).keep
+        emit(f"fig9f_skyline_m{m}", 0.0, f"unpruned={float(keep.mean()):.5f}")
+    # JOIN degrades with scale (more Bloom false positives)
+    for m in scales:
+        ka = jnp.asarray(rng.integers(0, m, m).astype(np.uint32))
+        kb = jnp.asarray(rng.integers(m // 2, m + m // 2, m).astype(np.uint32))
+        ra, rb = join_prune(ka, kb, nbits=1 << 15)
+        emit(f"scale_join_m{m}", 0.0,
+             f"unpruned={(float(ra.keep.mean()) + float(rb.keep.mean())) / 2:.4f}")
+    # HAVING degrades with scale (CMS overestimates accumulate)
+    for m in scales:
+        keys = jnp.asarray(rng.integers(0, 64 + m // 500, m).astype(np.uint32))
+        vals = jnp.asarray(rng.integers(1, 10, m).astype(np.int32))
+        thr = float(np.quantile(np.bincount(np.asarray(keys),
+                                            weights=np.asarray(vals)), 0.9))
+        r = having_prune(keys, vals, thr, rows=3, width=512)
+        emit(f"scale_having_m{m}", 0.0, f"unpruned={float(r.keep.mean()):.4f}")

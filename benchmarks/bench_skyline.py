@@ -1,0 +1,61 @@
+"""SKYLINE benchmarks: Fig 9b (Ex. 6) — APH vs SUM vs Baseline vs OPT."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (master_complete_skyline, opt_keep_skyline,
+                        skyline_oracle, skyline_prune)
+from repro.kernels import ops as kops
+
+from .common import emit, time_fn
+
+
+def _points(m: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    # anti-correlated-ish mixture: interesting skylines (paper's setting)
+    a = rng.integers(1, 1 << 16, (m // 2, 2))
+    b = np.stack([rng.integers(1, 1 << 8, m - m // 2),
+                  rng.integers(1, 1 << 16, m - m // 2)], axis=1)
+    pts = np.concatenate([a, b])
+    rng.shuffle(pts)
+    return jnp.asarray(pts.astype(np.float32))
+
+
+def _baseline_keep(pts, w: int):
+    """Baseline from Fig 9b: store w arbitrary (first-w) points."""
+    import numpy as np
+    p = np.asarray(pts, dtype=np.float64)
+    store = p[:w]
+    dom = (np.all(p[:, None, :] <= store[None], axis=-1)
+           & np.any(p[:, None, :] < store[None], axis=-1))
+    keep = ~np.any(dom, axis=1)
+    keep[:w] = True
+    return keep
+
+
+def fig9b():
+    m = 60_000
+    pts = _points(m)
+    sky = skyline_oracle(pts)
+    opt_un = float(opt_keep_skyline(pts).mean())
+    for score in ("aph", "sum"):
+        for w in (7, 10, 20):
+            fn = lambda: skyline_prune(pts, w=w, score=score).keep
+            us = time_fn(fn)
+            keep = fn()
+            assert bool(jnp.all(keep | ~sky)), "pruned a skyline point!"
+            emit(f"fig9b_skyline_{score}_w{w}", us,
+                 f"unpruned={float(keep.mean()):.5f};opt={opt_un:.5f}")
+    for w in (7, 20):
+        keep = _baseline_keep(pts, w)
+        emit(f"fig9b_skyline_baseline_w{w}", 0.0,
+             f"unpruned={float(keep.mean()):.5f}")
+    us = time_fn(lambda: kops.skyline_prune(pts, w=10, block=256))
+    keep = kops.skyline_prune(pts, w=10, block=256)
+    emit("fig9b_skyline_kernel_w10", us,
+         f"unpruned={float(keep.mean()):.5f}")
+
+
+def run():
+    fig9b()

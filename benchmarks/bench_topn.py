@@ -1,0 +1,86 @@
+"""TOP-N benchmarks: Fig 9c + Theorems 2/3 (Ex. 3/7).
+
+Fig 9c: deterministic ladder vs randomized matrix vs OPT on a random
+permutation stream. Thm 2: failure probability at the prescribed w.
+Thm 3: expected forwarded count vs the w·d·ln(m·e/(w·d)) bound.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (master_complete_topn, opt_keep_topn, thm2_opt_d,
+                        thm2_w, thm3_forwarded_bound, topn_det_prune,
+                        topn_rand_prune)
+from repro.kernels import ops as kops
+
+from .common import emit, time_fn
+
+
+def fig9c():
+    m, N = 400_000, 250
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
+    opt_un = float(opt_keep_topn(v, N).mean())
+    d = 4096
+    w = thm2_w(d, N, 1e-4)
+    fn_r = lambda: topn_rand_prune(v, d=d, w=w).keep
+    us = time_fn(fn_r)
+    emit(f"fig9c_topn_rand_d{d}_w{w}", us,
+         f"unpruned={float(fn_r().mean()):.5f};opt={opt_un:.5f}")
+    for wd in (4, 16):  # w=4 (Table 2 default) starves the ladder on
+        # uniform data: thresholds reach only 2^3·t0; w=16 lets the
+        # qualified level track the distribution (paper's pageRank data
+        # is heavy-tailed, which w=4 suits)
+        fn_d = lambda: topn_det_prune(v, N=N, w=wd).keep
+        us = time_fn(fn_d)
+        emit(f"fig9c_topn_det_w{wd}", us,
+             f"unpruned={float(fn_d().mean()):.5f}")
+    us = time_fn(lambda: kops.topn_prune(v, d=d, w=w, block=256))
+    keep = kops.topn_prune(v, d=d, w=w, block=256)
+    emit(f"fig9c_topn_kernel_d{d}_w{w}", us,
+         f"unpruned={float(keep.mean()):.5f}")
+
+
+def thm2():
+    N, delta, d = 1000, 1e-4, 600
+    w = thm2_w(d, N, delta)
+    emit("thm2_w_example", 0.0, f"d=600;N=1000;w={w};paper_says=16")
+    d2 = 8000
+    emit("thm2_w_large_d", 0.0,
+         f"d=8000;w={thm2_w(d2, N, delta)};paper_says=5")
+    emit("thm2_opt_d", 0.0,
+         f"N=1000;opt_d={thm2_opt_d(N, delta)};paper_says=481")
+    # empirical failure rate over trials at small scale
+    fails = 0
+    trials = 20
+    m, Ns, ds = 20_000, 50, 256
+    ws = thm2_w(ds, Ns, 1e-2)
+    for t in range(trials):
+        rng = np.random.default_rng(100 + t)
+        v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
+        keep = topn_rand_prune(v, d=ds, w=ws, seed=t).keep
+        topv, _ = master_complete_topn(v, keep, Ns)
+        true = np.sort(np.asarray(v))[-Ns:]
+        fails += not np.allclose(np.sort(np.asarray(topv)), true)
+    emit("thm2_empirical_failure", 0.0,
+         f"fails={fails}/{trials};delta=0.01")
+
+
+def thm3():
+    m, N, delta = 400_000, 250, 1e-4
+    d = 4096
+    w = thm2_w(d, N, delta)
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
+    keep = topn_rand_prune(v, d=d, w=w).keep
+    forwarded = int(keep.sum())
+    bound = thm3_forwarded_bound(m, d, w)
+    emit("thm3_forwarded", 0.0,
+         f"forwarded={forwarded};bound={bound:.0f};holds={forwarded <= bound}")
+
+
+def run():
+    fig9c()
+    thm2()
+    thm3()

@@ -1,0 +1,27 @@
+"""Benchmark harness utilities: timing + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (one per paper
+table/figure datapoint) so downstream tooling can diff runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > results/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import analyze
+
+
+def rows(out_dir="results/dryrun"):
+    base, opt = {}, {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        parts = os.path.basename(path)[:-5].split("__")
+        key = tuple(parts[:3])
+        if len(parts) == 3:
+            base[key] = rec
+        else:
+            opt.setdefault(key, []).append((parts[3], rec))
+    return base, opt
+
+
+def fmt(rec):
+    if rec.get("status") == "skipped":
+        return None
+    a = analyze(rec)
+    mem = rec.get("memory_analysis", {})
+    args_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+    return (f"{a['compute_s']:.3f} | {a['memory_s']:.3f} | "
+            f"{a['collective_s']:.3f} | {a['dominant']:10s} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.3f} | "
+            f"{args_gb:.1f}")
+
+
+def main():
+    base, opt = rows()
+    print("| cell | compute_s | memory_s | collective_s | dominant | "
+          "useful | roofline_frac | args GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        rec = base[key]
+        cell = "__".join(key)
+        if rec.get("status") == "skipped":
+            print(f"| {cell} | — | — | — | skipped | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            print(f"| {cell} | — | — | — | ERROR | — | — | — |")
+            continue
+        print(f"| {cell} | {fmt(rec)} |")
+        for tag, orec in sorted(opt.get(key, [])):
+            if orec.get("status") == "ok":
+                print(f"| &nbsp;&nbsp;↳ {tag} | {fmt(orec)} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Roofline analysis from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch × shape × mesh) cell, three terms in seconds:
+
+  compute    = FLOPs_global / (chips × 197e12 bf16 FLOP/s)
+  memory     = traffic_model_bytes / (chips × 819e9 B/s HBM)
+  collective = collective_bytes_per_device / 50e9 B/s link
+
+FLOPs_global comes from the jaxpr walker (scan-trip-count exact, includes
+remat recompute); traffic from the documented analytic model; collective
+bytes from the trip-count-aware HLO walk (per-device SPMD program, so no
+chips division). MODEL_FLOPS = 6·N(_active)·D_tokens; the useful-compute
+ratio MODEL_FLOPS / FLOPs_global exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e-class)
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link (ICI)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["active_params"] if rec["arch"].find("moe") >= 0 or \
+        rec["active_params"] != rec["params"] else rec["params"]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    mult = 6 if rec["shape"] == "train_4k" else 2
+    return mult * n * tokens
+
+
+def analyze(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    compute_s = rec["flops_global"] / (chips * PEAK_FLOPS)
+    memory_s = rec.get("traffic_model_bytes", 0) / (chips * HBM_BW)
+    coll_s = rec["collectives"]["total_bytes"] / LINK_BW
+    mf = model_flops(rec)
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    bound = max(compute_s, memory_s, coll_s)
+    return {
+        "cell": rec["cell"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / max(rec["flops_global"], 1),
+        "roofline_fraction": compute_s / max(bound, 1e-30),
+        "static_gb_per_dev": rec.get("static_arg_bytes_per_device", 0) / 2**30,
+    }
+
+
+def load_all(out_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            out.append(analyze(rec))
+        elif rec.get("status") == "skipped":
+            out.append({"cell": rec["cell"], "skipped": rec["reason"][:60]})
+    return out
+
+
+def run():
+    rows = load_all()
+    if not rows:
+        print("roofline,-1,no dryrun artifacts — run repro.launch.dryrun first")
+        return
+    for r in rows:
+        if "skipped" in r:
+            print(f"roofline_{r['cell']},0.0,skipped:{r['skipped']}")
+            continue
+        print(f"roofline_{r['cell']},0.0,"
+              f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+              f"collective={r['collective_s']:.4f}s;dom={r['dominant']};"
+              f"useful={r['useful_ratio']:.2f};"
+              f"roofline_frac={r['roofline_fraction']:.2f};"
+              f"static_gb={r['static_gb_per_dev']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure; prints ``name,us_per_call,derived``
+CSV rows. The roofline section reads the dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_completion, bench_distinct, bench_resources,
+                   bench_scale, bench_skyline, bench_topn, roofline)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (bench_distinct, bench_topn, bench_skyline, bench_scale,
+                bench_completion, bench_resources, roofline):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{mod.__name__},-1,ERROR")
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Cheetah-JAX: switch-pruning query acceleration (Tirmazi et al., 2020)
+rebuilt as a TPU-native JAX framework + a multi-pod LM training/serving
+stack with the pruning abstraction as a first-class feature."""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""Cheetah core: the pruning abstraction and per-query pruning algorithms.
+
+Paper: "Cheetah: Accelerating Database Queries with Switch Pruning"
+(Tirmazi, Ben Basat, Gao, Yu — 2020). A pruner A_Q maps a stream D to a
+keep-mask selecting A_Q(D) ⊆ D with Q(A_Q(D)) = Q(D); the master completes
+the query on the survivors.
+"""
+from .pruning import PruneResult, compact, prune_rate_vs_opt
+from .hashing import mix32, hash_mod, multi_hash, fingerprint, fingerprint_bits_thm4
+from .distinct import (distinct_prune, master_complete_distinct,
+                       opt_keep_distinct, thm1_bound)
+from .topn import (topn_rand_prune, topn_det_prune, thm2_w, thm2_opt_d,
+                   thm3_forwarded_bound, opt_keep_topn, master_complete_topn)
+from .join import (join_prune, join_prune_asymmetric, master_complete_join,
+                   join_oracle)
+from .having import having_prune, master_complete_having, having_oracle
+from .skyline import (skyline_prune, skyline_oracle, opt_keep_skyline,
+                      master_complete_skyline, score_sum, score_aph)
+from .groupby import groupby_prune, master_complete_groupby, groupby_oracle
+from .filter import (Pred, And, Or, TRUE, relax, filter_prune, evaluate,
+                     evaluate_truthtable, master_complete_filter)
+from .planner import (SwitchProfile, ResourceFootprint, footprint,
+                      pack_queries, rule_count, PackingPlan)
+from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
+                       cms_build, cms_query)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,130 @@
+"""DISTINCT pruning (paper §4.2 Ex. 2, §5 Ex. 8, Theorems 1 & 4).
+
+State: a d×w matrix where each row is a tiny cache (LRU or FIFO) of the
+last w values hashed to it. A repeat value found in its row is pruned;
+new values are inserted with a rolling replacement. No false positives:
+an entry is only pruned when its exact (finger)print is present, so the
+master receives a superset of the distinct values. Fingerprint collisions
+(Ex. 8) are the only failure mode and are sized by Thm 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_mod
+from .pruning import PruneResult
+
+SENTINEL = jnp.uint32(0)  # paired with a valid-mask; value 0 is representable
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistinctState:
+    slots: jnp.ndarray  # uint32[d, w] cached (finger)prints
+    valid: jnp.ndarray  # bool[d, w]
+    head: jnp.ndarray   # int32[d] FIFO insert pointer (unused by LRU)
+
+
+def init_state(d: int, w: int) -> DistinctState:
+    return DistinctState(
+        slots=jnp.zeros((d, w), jnp.uint32),
+        valid=jnp.zeros((d, w), jnp.bool_),
+        head=jnp.zeros((d,), jnp.int32),
+    )
+
+
+def _step(policy: str, state: DistinctState, x: jnp.ndarray, row: jnp.ndarray):
+    """Process one entry (exact switch semantics). Returns (state, keep)."""
+    slots_r = state.slots[row]
+    valid_r = state.valid[row]
+    hitvec = (slots_r == x) & valid_r
+    hit = jnp.any(hitvec)
+    w = slots_r.shape[0]
+    if policy == "lru":
+        # Move-to-front on hit; insert-at-front (evict last) on miss.
+        # Rolling replacement: slot i takes slot i-1's value up to the hit
+        # position (or the end on miss).
+        hitpos = jnp.argmax(hitvec)  # w if no hit handled via `hit`
+        limit = jnp.where(hit, hitpos, w - 1)
+        idx = jnp.arange(w)
+        shifted = jnp.where((idx >= 1) & (idx <= limit), jnp.roll(slots_r, 1), slots_r)
+        shifted_v = jnp.where((idx >= 1) & (idx <= limit), jnp.roll(valid_r, 1), valid_r)
+        new_slots = shifted.at[0].set(x)
+        new_valid = shifted_v.at[0].set(True)
+        new_head = state.head
+    elif policy == "fifo":
+        # On miss insert at rotating pointer; on hit leave untouched.
+        h = state.head[row]
+        new_slots = jnp.where(hit, slots_r, slots_r.at[h].set(x))
+        new_valid = jnp.where(hit, valid_r, valid_r.at[h].set(True))
+        new_head = state.head.at[row].set(jnp.where(hit, h, (h + 1) % w))
+    else:  # pragma: no cover
+        raise ValueError(policy)
+    state = DistinctState(
+        slots=state.slots.at[row].set(new_slots),
+        valid=state.valid.at[row].set(new_valid),
+        head=new_head,
+    )
+    return state, ~hit
+
+
+@partial(jax.jit, static_argnames=("d", "w", "policy", "seed"))
+def distinct_prune(values: jnp.ndarray, *, d: int, w: int, policy: str = "lru",
+                   seed: int = 0) -> PruneResult:
+    """Stream `values` (uint32[m] (finger)prints) through the d×w cache.
+
+    keep[i] is True iff value i was NOT found in its row cache — i.e. the
+    switch forwards it. Exact sequential semantics via lax.scan.
+    """
+    rows = hash_mod(values, d, seed=seed)
+
+    def body(state, xr):
+        x, r = xr
+        return _step(policy, state, x, r)
+
+    state, keep = jax.lax.scan(body, init_state(d, w), (values, rows))
+    return PruneResult(keep=keep, state=state)
+
+
+def master_complete_distinct(values: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Master-side completion: exact DISTINCT over the forwarded stream.
+
+    Returns a bool mask (over the original index space) selecting the first
+    occurrence of each distinct forwarded value — Q(A_Q(D)).
+    """
+    m = values.shape[0]
+    order = jnp.argsort(values, stable=True)
+    sv, sk = values[order], keep[order]
+    ski = sk.astype(jnp.int32)
+    new_seg = jnp.concatenate([jnp.array([True]), sv[1:] != sv[:-1]])
+    seg_id = jnp.cumsum(new_seg) - 1
+    csum = jnp.cumsum(ski)
+    base_at_start = jnp.where(new_seg, csum - ski, 0)
+    seg_base = jax.ops.segment_max(base_at_start, seg_id, num_segments=m)
+    rank_in_seg = csum - seg_base[seg_id]  # kept-count within value-run
+    first_kept = sk & (rank_in_seg == 1)
+    return jnp.zeros(m, jnp.bool_).at[order].set(first_kept)
+
+
+def opt_keep_distinct(values) -> jnp.ndarray:
+    """OPT: forward only true first occurrences (numpy, oracle)."""
+    import numpy as np
+
+    seen: set = set()
+    v = np.asarray(values)
+    out = np.zeros(v.shape[0], bool)
+    for i, x in enumerate(v.tolist()):
+        if x not in seen:
+            seen.add(x)
+            out[i] = True
+    return jnp.asarray(out)
+
+
+def thm1_bound(D: int, d: int, w: int) -> float:
+    """Expected pruned fraction of duplicate entries (Theorem 1)."""
+    return 0.99 * min(w * d / (D * math.e), 1.0)

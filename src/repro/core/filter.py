@@ -1,0 +1,154 @@
+"""Filtering-query pruning (paper §4.1 Ex. 1): predicate decomposition.
+
+A monotone boolean formula over basic predicates is split into
+switch-supported and unsupported parts; each unsupported predicate is
+replaced by a tautology (True) and the formula is reduced. The switch
+evaluates the relaxed formula — a superset of matching rows survives —
+and the master applies the full formula to complete the query.
+
+Predicates are a tiny AST; supported ones lower to vectorized jnp ops
+(the switch's comparator/bit-match ALUs), and the combined formula is
+evaluated via the paper's truth-table trick: pack basic-predicate results
+into a bit vector and look the verdict up in a 2^n table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .pruning import PruneResult
+
+
+# ----------------------------------------------------------------- AST
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """Basic predicate on one column. switch_supported=False models e.g.
+    `name LIKE e%s` (string ops the switch cannot evaluate)."""
+    column: str
+    op: str  # gt|ge|lt|le|eq|ne|like (like = unsupported on switch)
+    value: object
+    switch_supported: bool = True
+
+    def evaluate(self, cols: dict) -> jnp.ndarray:
+        c = cols[self.column]
+        fn: dict[str, Callable] = {
+            "gt": lambda: c > self.value, "ge": lambda: c >= self.value,
+            "lt": lambda: c < self.value, "le": lambda: c <= self.value,
+            "eq": lambda: c == self.value, "ne": lambda: c != self.value,
+            "like": lambda: self.value(c),  # host-side callable
+        }
+        return fn[self.op]()
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    terms: tuple
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    terms: tuple
+
+@dataclasses.dataclass(frozen=True)
+class TRUE:
+    pass
+
+Formula = object  # Pred | And | Or | TRUE
+
+
+def relax(f: Formula) -> Formula:
+    """Replace unsupported predicates by tautologies; reduce (modus ponens).
+
+    Sound for *monotone* formulas: relaxed(f) is implied-by f, so rows
+    failing relaxed(f) provably fail f — safe to prune.
+    """
+    if isinstance(f, Pred):
+        return f if f.switch_supported else TRUE()
+    if isinstance(f, And):
+        terms = tuple(t for t in (relax(x) for x in f.terms)
+                      if not isinstance(t, TRUE))
+        if not terms:
+            return TRUE()
+        return terms[0] if len(terms) == 1 else And(terms)
+    if isinstance(f, Or):
+        terms = tuple(relax(x) for x in f.terms)
+        if any(isinstance(t, TRUE) for t in terms):
+            return TRUE()
+        return terms[0] if len(terms) == 1 else Or(terms)
+    return f
+
+
+def basic_preds(f: Formula) -> list[Pred]:
+    if isinstance(f, Pred):
+        return [f]
+    if isinstance(f, (And, Or)):
+        out: list[Pred] = []
+        for t in f.terms:
+            out.extend(basic_preds(t))
+        return out
+    return []
+
+
+def evaluate(f: Formula, cols: dict) -> jnp.ndarray:
+    """Direct vectorized evaluation (master side / oracle)."""
+    if isinstance(f, TRUE):
+        some = next(iter(cols.values()))
+        return jnp.ones(some.shape[0], jnp.bool_)
+    if isinstance(f, Pred):
+        return f.evaluate(cols)
+    sub = [evaluate(t, cols) for t in f.terms]
+    out = sub[0]
+    for s in sub[1:]:
+        out = (out & s) if isinstance(f, And) else (out | s)
+    return out
+
+
+def evaluate_truthtable(f: Formula, cols: dict) -> jnp.ndarray:
+    """Switch-style: evaluate basic predicates, pack result bits, look up
+    the verdict in a 2^n truth table (paper: 'writes the values of the
+    predicates as a bit vector and looks up the value in a truth table')."""
+    preds = basic_preds(f)
+    n = len(preds)
+    assert n <= 16, "truth-table lookup limited to 16 basic predicates"
+    bits = jnp.zeros(next(iter(cols.values())).shape[0], jnp.int32)
+    for i, p in enumerate(preds):
+        bits = bits | (p.evaluate(cols).astype(jnp.int32) << i)
+
+    # build table by evaluating f on all 2^n assignments (host side — this
+    # is the control plane installing match-action rules)
+    def eval_assign(g, assign: dict) -> bool:
+        if isinstance(g, TRUE):
+            return True
+        if isinstance(g, Pred):
+            return assign[id(g)]
+        vals = [eval_assign(t, assign) for t in g.terms]
+        return all(vals) if isinstance(g, And) else any(vals)
+
+    import itertools
+
+    table = []
+    for combo in itertools.product([False, True], repeat=n):
+        assign = {id(p): combo[i] for i, p in enumerate(preds)}
+        table.append(eval_assign(f, assign))
+    tbl = jnp.asarray(table, jnp.bool_)
+    # combo order: product varies last predicate fastest → bit i of index
+    # corresponds to predicate (n-1-i); remap to our packing
+    index = jnp.zeros_like(bits)
+    for i in range(n):
+        index = index | (((bits >> i) & 1) << (n - 1 - i))
+    return tbl[index]
+
+
+def filter_prune(formula: Formula, cols: dict, use_truthtable: bool = True) -> PruneResult:
+    """Switch pass: prune rows failing the relaxed formula."""
+    r = relax(formula)
+    ev = evaluate_truthtable if use_truthtable else evaluate
+    keep = ev(r, cols) if not isinstance(r, TRUE) else jnp.ones(
+        next(iter(cols.values())).shape[0], jnp.bool_)
+    return PruneResult(keep=keep, state=r)
+
+
+def master_complete_filter(formula: Formula, cols: dict, keep: jnp.ndarray) -> jnp.ndarray:
+    """Master applies the FULL formula to surviving rows."""
+    return keep & evaluate(formula, cols)

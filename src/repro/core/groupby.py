@@ -1,0 +1,119 @@
+"""GROUP BY pruning (paper §4.2/§8, Table 2 row GROUP BY).
+
+The switch maintains a d×w matrix of (key, aggregate) pairs. For a
+commutative-monoid aggregate (SUM/COUNT/MIN/MAX) an arriving entry whose
+key is cached is *folded into* the cached aggregate and pruned; on a miss
+the rolling replacement evicts a (key, partial) pair which is emitted to
+the master as a synthetic entry (the paper's packet-with-new-values). The
+master folds forwarded entries + emitted partials + the final state —
+exactly Q(D) because the aggregate is associative/commutative.
+
+keep[i]=False means entry i's value was absorbed into switch state; the
+emitted stream (same length m, masked) carries evictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_mod
+from .pruning import PruneResult
+
+_INIT = {"sum": 0.0, "count": 0.0, "min": 3.4e38, "max": -3.4e38}
+_FOLD = {
+    "sum": lambda a, v: a + v,
+    "count": lambda a, v: a + 1.0,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GroupByState:
+    keys: jnp.ndarray  # uint32[d, w]
+    aggs: jnp.ndarray  # f32[d, w]
+    valid: jnp.ndarray  # bool[d, w]
+
+
+@partial(jax.jit, static_argnames=("d", "w", "agg", "seed"))
+def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray, *, d: int, w: int,
+                  agg: str = "sum", seed: int = 0) -> PruneResult:
+    """Returns keep mask + emitted (evicted_key, evicted_agg, evicted_valid)."""
+    fold = _FOLD[agg]
+    init_v = jnp.float32(_INIT[agg])
+    rows = hash_mod(keys, d, seed=seed)
+
+    def body(state, krv):
+        k, r, v = krv
+        krow, arow, vrow = state.keys[r], state.aggs[r], state.valid[r]
+        hitvec = (krow == k) & vrow
+        hit = jnp.any(hitvec)
+        hitpos = jnp.argmax(hitvec)
+        # fold into cached aggregate on hit
+        arow_hit = arow.at[hitpos].set(fold(arow[hitpos], v))
+        # miss: insert (k, fold(init, v)) at front, evict last slot
+        ev_k, ev_a, ev_valid = krow[-1], arow[-1], vrow[-1] & ~hit
+        krow_miss = jnp.roll(krow, 1).at[0].set(k)
+        arow_miss = jnp.roll(arow, 1).at[0].set(fold(init_v, v))
+        vrow_miss = jnp.roll(vrow, 1).at[0].set(True)
+        new_k = jnp.where(hit, krow, krow_miss)
+        new_a = jnp.where(hit, arow_hit, arow_miss)
+        new_vld = jnp.where(hit, vrow, vrow_miss)
+        state = GroupByState(
+            keys=state.keys.at[r].set(new_k),
+            aggs=state.aggs.at[r].set(new_a),
+            valid=state.valid.at[r].set(new_vld),
+        )
+        # entry is always absorbed (pruned); evictions are the traffic
+        return state, (jnp.bool_(False), ev_k, ev_a, ev_valid)
+
+    init = GroupByState(
+        keys=jnp.zeros((d, w), jnp.uint32),
+        aggs=jnp.full((d, w), init_v, jnp.float32),
+        valid=jnp.zeros((d, w), jnp.bool_),
+    )
+    state, (keep, ev_k, ev_a, ev_valid) = jax.lax.scan(
+        body, init, (keys, rows, values.astype(jnp.float32)))
+    return PruneResult(keep=keep, state=state, emitted=(ev_k, ev_a, ev_valid))
+
+
+def master_complete_groupby(result: PruneResult, agg: str = "sum") -> dict:
+    """Fold evicted partials + final switch state into exact Q(D)."""
+    import numpy as np
+
+    fold = {"sum": lambda a, v: a + v, "count": lambda a, v: a + v,
+            "min": min, "max": max}[agg]
+    out: dict = {}
+    ev_k, ev_a, ev_valid = result.emitted
+    for k, a, ok in zip(np.asarray(ev_k).tolist(), np.asarray(ev_a).tolist(),
+                        np.asarray(ev_valid).tolist()):
+        if ok:
+            out[k] = fold(out[k], a) if k in out else a
+    st = result.state
+    for k, a, ok in zip(np.asarray(st.keys).ravel().tolist(),
+                        np.asarray(st.aggs).ravel().tolist(),
+                        np.asarray(st.valid).ravel().tolist()):
+        if ok:
+            out[k] = fold(out[k], a) if k in out else a
+    return out
+
+
+def groupby_oracle(keys, values, agg: str = "sum") -> dict:
+    import numpy as np
+
+    fold = {"sum": lambda a, v: a + v, "count": lambda a, v: a + 1,
+            "min": min, "max": max}[agg]
+    init = {"sum": 0.0, "count": 0.0}.get(agg)
+    out: dict = {}
+    for k, v in zip(np.asarray(keys).tolist(), np.asarray(values).tolist()):
+        if k in out:
+            out[k] = fold(out[k], v)
+        elif agg in ("min", "max"):
+            out[k] = v
+        else:
+            out[k] = fold(init, v)
+    return out

@@ -1,0 +1,106 @@
+"""Integer hashing / fingerprinting substrate.
+
+The switch computes hashes with CRC units; on TPU we use multiply-xorshift
+finalizers (murmur3/splitmix style) which are exact uint32 ops (wraparound
+multiply + shifts) — implementable on both the VPU and in Pallas kernels.
+
+All functions operate on uint32 arrays and are pure jnp (no RNG state).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# murmur3 / splitmix constants
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_C3 = jnp.uint32(0x9E3779B9)  # golden-ratio increment for seed derivation
+
+
+def as_u32(x) -> jnp.ndarray:
+    """Reinterpret/convert input entries to uint32 lanes."""
+    x = jnp.asarray(x)
+    if x.dtype == jnp.uint32:
+        return x
+    if x.dtype == jnp.float32:
+        return x.view(jnp.uint32)  # order-agnostic uses only (hashing)
+    return x.astype(jnp.uint32)
+
+
+def mix32(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """Murmur3 fmix32 finalizer with seed. Bijective for fixed seed."""
+    h = as_u32(x) ^ jnp.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_mod(x: jnp.ndarray, mod: int, seed: int = 0) -> jnp.ndarray:
+    """Hash entries into {0, ..., mod-1} (row selection on the switch)."""
+    # Multiply-shift range reduction avoids modulo bias for power-of-two and
+    # is cheap on hardware; for arbitrary mod use the high-word trick.
+    h = mix32(x, seed)
+    # (h * mod) >> 32 via uint64 is unavailable without x64; use float-free
+    # 16-bit split multiply to compute the high 32 bits of h * mod.
+    lo = h & jnp.uint32(0xFFFF)
+    hi = h >> 16
+    m = jnp.uint32(mod)
+    # h*m = hi*m*2^16 + lo*m ;  we need >> 32
+    t = (hi * m) + ((lo * m) >> 16)  # == (h*m) >> 16, modulo 2^32 (safe: mod < 2^16 OK)
+    if mod < (1 << 16):
+        return (t >> 16).astype(jnp.int32)
+    # fall back to modulo for large mod (fine in JAX; switch would use CRC pools)
+    return (mix32(x, seed) % jnp.uint32(mod)).astype(jnp.int32)
+
+
+def multi_hash(x: jnp.ndarray, mod: int, num: int, seed: int = 0) -> jnp.ndarray:
+    """num independent hashes in {0..mod-1}; shape x.shape + (num,)."""
+    seeds = (jnp.arange(num, dtype=jnp.uint32) * _C3) + jnp.uint32(seed)
+    # vectorized: mix with each derived seed
+    xe = as_u32(x)[..., None]
+    h = xe ^ seeds
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(mod)).astype(jnp.int32)
+
+
+def fingerprint(cols: list[jnp.ndarray] | jnp.ndarray, bits: int = 32, seed: int = 0) -> jnp.ndarray:
+    """Fingerprint one or multiple columns into `bits`-bit uint32 values.
+
+    The paper's CWorker computes fingerprints of wide / multi-column entries
+    before they hit the switch (Ex. 8, Thm 4). bits <= 32 here; Thm 4
+    sizing f = ceil(log2(d * M^2 / delta)) is computed by
+    `fingerprint_bits_thm4`.
+    """
+    if bits > 32:
+        raise ValueError("fingerprints are uint32 lanes; bits must be <= 32")
+    if isinstance(cols, (list, tuple)):
+        h = jnp.zeros(jnp.broadcast_shapes(*[jnp.shape(c) for c in cols]), jnp.uint32)
+        for i, c in enumerate(cols):
+            h = mix32(as_u32(c) + h * _C3, seed + i * 101)
+    else:
+        h = mix32(cols, seed)
+    if bits == 32:
+        return h
+    return h & jnp.uint32((1 << bits) - 1)
+
+
+def fingerprint_bits_thm4(d: int, D: int, delta: float, w: int | None = None) -> int:
+    """Thm 4: required fingerprint length f = ceil(log2(d * M^2 / delta)).
+
+    M is the per-row distinct load bound; three regimes by D vs d ln(2d/δ).
+    """
+    import math
+
+    if D > d * math.log(2 * d / delta):
+        M = math.e * D / d
+    elif D >= d * math.log(1 / delta) / math.e:
+        M = math.e * math.log(2 * d / delta)
+    else:
+        M = 1.3 * math.log(2 * d / delta) / math.log((d / (D * math.e)) * math.log(2 * d / delta))
+    return max(1, math.ceil(math.log2(d * M * M / delta)))

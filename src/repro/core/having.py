@@ -1,0 +1,56 @@
+"""HAVING pruning (paper §4.3 Ex. 5): Count-Min + threshold.
+
+HAVING f(key) > c for f ∈ {COUNT, SUM}: the switch sketches f per key;
+by the one-sided error (est >= true), pruning keys whose estimate is <= c
+never loses a qualifying key. The master gets a superset of qualifying
+keys, requests a partial second pass for them, and removes false keys.
+MIN/MAX-HAVING degenerate to a single comparison + DISTINCT (see paper).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .pruning import PruneResult
+from .sketches import CountMin, cms_build, cms_query
+
+
+@partial(jax.jit, static_argnames=("rows", "width", "agg", "seed"))
+def having_prune(keys: jnp.ndarray, values: jnp.ndarray | None, threshold, *,
+                 rows: int = 3, width: int = 1024, agg: str = "sum",
+                 seed: int = 0) -> PruneResult:
+    """First pass: sketch f per key; keep[i]=True iff est(key_i) > threshold.
+
+    Entries of qualifying keys are re-streamed in the paper's partial
+    second pass — `keep` marks exactly those (the switch blocks the rest).
+    """
+    weights = None if agg == "count" else values
+    sketch = cms_build(keys, weights, rows, width, seed=seed)
+    est = cms_query(sketch, keys)
+    keep = est > threshold
+    return PruneResult(keep=keep, state=sketch)
+
+
+def master_complete_having(keys, values, keep, threshold, agg: str = "sum"):
+    """Master: exact aggregate over forwarded entries; drop false keys.
+
+    Correct because *all* entries of any qualifying key are forwarded
+    (the sketch overestimates, so qualifying keys pass the first pass and
+    the second pass streams every one of their entries).
+    """
+    import numpy as np
+
+    k = np.asarray(keys)[np.asarray(keep)]
+    v = (np.ones_like(k, dtype=np.int64) if agg == "count"
+         else np.asarray(values)[np.asarray(keep)].astype(np.int64))
+    agg_map: dict = {}
+    for kk, vv in zip(k.tolist(), v.tolist()):
+        agg_map[kk] = agg_map.get(kk, 0) + vv
+    return sorted(kk for kk, s in agg_map.items() if s > threshold)
+
+
+def having_oracle(keys, values, threshold, agg: str = "sum"):
+    ones = jnp.ones(jnp.shape(keys), jnp.bool_)
+    return master_complete_having(keys, values, ones, threshold, agg)

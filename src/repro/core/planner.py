@@ -1,0 +1,136 @@
+"""Query planner + multi-query packing (paper §3, §6, Table 2).
+
+The planner decomposes a query spec into (switch part, master part),
+computes the switch resource footprint from Table 2's cost model, and
+packs multiple concurrent queries onto one pipeline (splitting per-stage
+ALUs/SRAM, reusing stages across resource-orthogonal algorithms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchProfile:
+    """A PISA switch resource envelope (Tofino-like defaults)."""
+    stages: int = 12
+    alus_per_stage: int = 12          # 'A' in Table 2
+    sram_per_stage_bytes: int = 1 << 20   # ~1 MB usable per stage
+    tcam_entries: int = 100_000
+    header_bytes: int = 20            # parsable bits budget per entry
+    same_stage_shared_memory: bool = True  # needed by FIFO*/BF* variants
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceFootprint:
+    """Table 2 row: per-algorithm switch consumption."""
+    stages: int
+    alus: int
+    sram_bytes: int
+    tcam: int = 0
+
+    def __add__(self, o: "ResourceFootprint") -> "ResourceFootprint":
+        return ResourceFootprint(self.stages + o.stages, self.alus + o.alus,
+                                 self.sram_bytes + o.sram_bytes, self.tcam + o.tcam)
+
+
+def footprint(algo: str, profile: SwitchProfile | None = None, **p) -> ResourceFootprint:
+    """Resource model reproducing Table 2 (64-bit slots)."""
+    prof = profile or SwitchProfile()
+    A = prof.alus_per_stage
+    slot = 8  # 64b
+    if algo == "distinct_fifo":
+        if not prof.same_stage_shared_memory:
+            raise ValueError("FIFO* requires same-stage shared memory")
+        d, w = p["d"], p["w"]
+        return ResourceFootprint(math.ceil(w / A), w, d * w * slot)
+    if algo == "distinct_lru":
+        d, w = p["d"], p["w"]
+        return ResourceFootprint(w, w, d * w * slot)
+    if algo == "skyline_sum":
+        D, w = p["D"], p["w"]
+        return ResourceFootprint(math.ceil(math.log2(max(D, 2))) + 2 * w,
+                                 2 * math.ceil(math.log2(max(D, 2))) - 1 + w * (D + 1),
+                                 w * (D + 1) * slot)
+    if algo == "skyline_aph":
+        D, w = p["D"], p["w"]
+        return ResourceFootprint(math.ceil(math.log2(max(D, 2))) + 2 * (w + 1),
+                                 2 * math.ceil(math.log2(max(D, 2))) - 1 + w * (D + 1),
+                                 w * (D + 1) * slot + (1 << 16) * 4, tcam=64 * D)
+    if algo == "topn_det":
+        w = p["w"]
+        return ResourceFootprint(w + 1, w + 1, (w + 1) * slot)
+    if algo == "topn_rand":
+        d, w = p["d"], p["w"]
+        return ResourceFootprint(w, w, d * w * slot)
+    if algo == "groupby":
+        d, w = p["d"], p["w"]
+        return ResourceFootprint(w, w, d * w * slot)
+    if algo == "join_bf":
+        M, H = p["M"], p["H"]
+        return ResourceFootprint(2, H, M)
+    if algo == "having":
+        d, w = p["d"], p["w"]  # d sketch rows, w counters each
+        return ResourceFootprint(math.ceil(d / A), d, d * w * slot)
+    if algo == "filter":
+        n = p.get("num_predicates", 1)
+        return ResourceFootprint(1, n, 4 * n)
+    raise KeyError(algo)
+
+
+@dataclasses.dataclass
+class PackingPlan:
+    """Concurrent placement of several queries on one pipeline (§6)."""
+    placements: dict  # name -> (first_stage, footprint)
+    stages_used: int
+    feasible: bool
+    reason: str = ""
+
+
+def pack_queries(queries: dict[str, ResourceFootprint],
+                 profile: SwitchProfile | None = None) -> PackingPlan:
+    """First-fit-decreasing packing with per-stage ALU/SRAM budgets.
+
+    Algorithms stack *in parallel* on the same stages when their combined
+    per-stage ALU and SRAM demands fit (paper: filter shares a stage with
+    GROUP BY's hashing/sums). Stage demand is modeled uniform across each
+    algorithm's stage span.
+    """
+    prof = profile or SwitchProfile()
+    alu_free = [prof.alus_per_stage] * prof.stages
+    sram_free = [prof.sram_per_stage_bytes] * prof.stages
+    tcam_free = prof.tcam_entries
+    placements: dict = {}
+    order = sorted(queries.items(), key=lambda kv: -kv[1].stages)
+    hi = 0
+    for name, fp in order:
+        if fp.stages > prof.stages:
+            return PackingPlan({}, 0, False, f"{name}: needs {fp.stages} stages > {prof.stages}")
+        per_stage_alu = math.ceil(fp.alus / max(fp.stages, 1))
+        per_stage_sram = math.ceil(fp.sram_bytes / max(fp.stages, 1))
+        placed = False
+        for s0 in range(prof.stages - fp.stages + 1):
+            span = range(s0, s0 + fp.stages)
+            if all(alu_free[s] >= per_stage_alu and sram_free[s] >= per_stage_sram
+                   for s in span) and tcam_free >= fp.tcam:
+                for s in span:
+                    alu_free[s] -= per_stage_alu
+                    sram_free[s] -= per_stage_sram
+                tcam_free -= fp.tcam
+                placements[name] = (s0, fp)
+                hi = max(hi, s0 + fp.stages)
+                placed = True
+                break
+        if not placed:
+            return PackingPlan({}, 0, False, f"{name}: no feasible placement")
+    # +1 final stage selecting the per-query prune bit (paper §6)
+    return PackingPlan(placements, min(hi + 1, prof.stages), True)
+
+
+def rule_count(algo: str, **p) -> int:
+    """Control-plane rules per query: 10-20 (paper §7.1)."""
+    base = {"distinct_lru": 12, "distinct_fifo": 12, "topn_det": 14,
+            "topn_rand": 12, "groupby": 13, "join_bf": 11, "having": 13,
+            "skyline_sum": 16, "skyline_aph": 20, "filter": 10}
+    return base.get(algo, 15)

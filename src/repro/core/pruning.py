@@ -1,0 +1,70 @@
+"""The pruning abstraction (paper §3).
+
+A pruning algorithm A_Q for query Q maps data D to A_Q(D) ⊆ D such that
+Q(A_Q(D)) = Q(D). On a switch, pruning == dropping packets; in JAX shapes
+are static, so a pruner returns a *keep mask* over the stream plus its
+final state, and `compact` materializes the surviving entries for the
+master. Superset safety (needed by the paper's reliability protocol §7.2):
+forwarding any superset of the kept entries must leave Q's output
+unchanged — every algorithm in this package has that property and it is
+tested with hypothesis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PruneResult:
+    """Outcome of streaming D through a pruner.
+
+    keep:  bool[m]  — True for entries forwarded to the master.
+    state: pytree   — final switch state (for inspection / second passes).
+    emitted: Any    — optional synthetic entries emitted by the switch at
+                      end-of-stream (e.g. GROUP BY partial aggregates).
+    """
+
+    keep: jnp.ndarray
+    state: Any = None
+    emitted: Any = None
+
+    @property
+    def pruned_fraction(self) -> jnp.ndarray:
+        return 1.0 - jnp.mean(self.keep.astype(jnp.float32))
+
+
+def compact(values: jnp.ndarray, keep: jnp.ndarray, fill=0):
+    """Gather surviving entries to the front (static shape, count returned).
+
+    values may be (m,) or (m, k) — rows are moved together. This is the
+    'wire': only the first `count` rows are semantically present at the
+    master.
+    """
+    m = keep.shape[0]
+    order = jnp.argsort(~keep, stable=True)  # kept entries first, stable order
+    moved = jnp.take(values, order, axis=0)
+    count = jnp.sum(keep.astype(jnp.int32))
+    idx = jnp.arange(m)
+    mask = idx < count
+    if moved.ndim > 1:
+        mask = mask[:, None]
+    return jnp.where(mask, moved, fill), count
+
+
+def prune_rate_vs_opt(keep: jnp.ndarray, opt_keep: jnp.ndarray) -> dict:
+    """Compare a pruner against OPT (the minimal correct survivor set)."""
+    keep = keep.astype(jnp.float32)
+    opt = opt_keep.astype(jnp.float32)
+    return {
+        "pruned": float(1 - keep.mean()),
+        "opt_pruned": float(1 - opt.mean()),
+        "excess_forwarded": float((keep - opt).clip(0).sum()),
+    }
+
+
+PrunerFn = Callable[[jnp.ndarray], PruneResult]

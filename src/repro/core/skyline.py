@@ -1,0 +1,133 @@
+"""SKYLINE pruning (paper §4.4 Ex. 6): w stored points + monotone projection.
+
+The switch stores w points, each with a scalar score h(x) where h is
+monotone increasing in every dimension (so y dominates x ⇒ h(y) >= h(x)).
+On arrival of x the pipeline does a rolling-minimum insertion by score
+(each stage: replace-if-greater, displaced point rolls on) which keeps the
+stages sorted descending by h. A stage whose point dominates x marks the
+packet for pruning; the drop happens at the end of the pipeline.
+
+Because insertion preserves descending score order and any dominator of x
+has h >= h(x), all potential dominators sit at stages *before* x's
+insertion point — so the per-stage pipeline is exactly equivalent to the
+vectorized form used here: compare x against the stored points with score
+>= h(x), then sorted-insert. (Deviation from the paper, documented in
+DESIGN.md: we forward a packet iff its ORIGINAL point is undominated,
+rather than forwarding displaced points and draining the switch at
+end-of-stream. The master receives a superset of the paper's forwarded
+set — at most w extra packets — and supersets never change skyline
+output, so correctness and pruning-rate plots are unaffected at stream
+scale.)
+
+Projections: SUM h_S(x)=Σx_j (biased by ranges) and APH — approximate
+product via sum of piecewise-linear log2 approximations (the switch uses
+TCAM lookups; the frexp identity log2(v) ≈ e + (v/2^e - 1) is exactly a
+first-order lookup-table approximation). Dominance is checked with strict
+inequality in at least one dim so exact duplicates are never pruned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .pruning import PruneResult
+
+NEG = jnp.float32(-3.4e38)
+
+
+def score_sum(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(jnp.float32), axis=-1)
+
+
+def score_aph(x: jnp.ndarray) -> jnp.ndarray:
+    """Approximate Product Heuristic: Σ log2~(x_j) (piecewise-linear log2)."""
+    v = x.astype(jnp.float32)
+    safe = jnp.maximum(v, 1.0)
+    e = jnp.floor(jnp.log2(safe))  # stand-in for the TCAM priority-encode
+    frac = safe / jnp.exp2(e) - 1.0
+    lg = jnp.where(v >= 1.0, e + frac, -16.0)
+    return jnp.sum(lg, axis=-1)
+
+
+_SCORES = {"sum": score_sum, "aph": score_aph}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SkylineState:
+    points: jnp.ndarray  # f32[w, D] sorted descending by score
+    scores: jnp.ndarray  # f32[w]    (NEG = empty slot)
+
+
+@partial(jax.jit, static_argnames=("w", "score"))
+def skyline_prune(points: jnp.ndarray, *, w: int, score: str = "aph") -> PruneResult:
+    """Stream points (f32/int[m, D], maximizing all dims) through w stages."""
+    h = _SCORES[score]
+    D = points.shape[-1]
+    idx = jnp.arange(w)
+
+    def body(state, x):
+        x = x.astype(jnp.float32)
+        hx = h(x)
+        pts, scs = state.points, state.scores
+        pos = jnp.sum(hx <= scs)  # stages with score >= hx sit before x
+        before = idx < pos        # empty slots (NEG) always sort after
+        dom = before & jnp.all(x <= pts, axis=-1) & jnp.any(x < pts, axis=-1)
+        pruned = jnp.any(dom)
+        # sorted insert at pos (rolling displacement == shift right)
+        shift = idx[:, None] > pos
+        new_pts = jnp.where(idx[:, None] == pos, x,
+                            jnp.where(shift, jnp.roll(pts, 1, axis=0), pts))
+        new_scs = jnp.where(idx == pos, hx,
+                            jnp.where(idx > pos, jnp.roll(scs, 1), scs))
+        return SkylineState(new_pts, new_scs), ~pruned
+
+    init = SkylineState(points=jnp.zeros((w, D), jnp.float32),
+                        scores=jnp.full((w,), NEG, jnp.float32))
+    state, keep = jax.lax.scan(body, init, points.astype(jnp.float32))
+    return PruneResult(keep=keep, state=state)
+
+
+def skyline_oracle(points) -> jnp.ndarray:
+    """True skyline membership mask (numpy O(m^2), test scale only)."""
+    import numpy as np
+
+    p = np.asarray(points, dtype=np.float64)
+    m = p.shape[0]
+    out = np.ones(m, bool)
+    for i in range(m):
+        dom = np.all(p >= p[i], axis=1) & np.any(p > p[i], axis=1)
+        if dom.any():
+            out[i] = False
+    return jnp.asarray(out)
+
+
+def opt_keep_skyline(points) -> jnp.ndarray:
+    """OPT forwards a point iff no *previous* point dominates it."""
+    import numpy as np
+
+    p = np.asarray(points, dtype=np.float64)
+    out = np.ones(p.shape[0], bool)
+    for i in range(1, p.shape[0]):
+        prev = p[:i]
+        dom = np.all(prev >= p[i], axis=1) & np.any(prev > p[i], axis=1)
+        out[i] = not dom.any()
+    return jnp.asarray(out)
+
+
+def master_complete_skyline(points, keep) -> jnp.ndarray:
+    """Exact skyline over forwarded points, mapped back to original idx."""
+    import numpy as np
+
+    p = np.asarray(points, dtype=np.float64)
+    k = np.asarray(keep)
+    out = np.zeros(p.shape[0], bool)
+    idx = np.nonzero(k)[0]
+    sub = p[idx]
+    for j, i in enumerate(idx):
+        dom = np.all(sub >= sub[j], axis=1) & np.any(sub > sub[j], axis=1)
+        out[i] = not dom.any()
+    return jnp.asarray(out)

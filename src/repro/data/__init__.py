@@ -1,0 +1,2 @@
+"""Data pipeline with Cheetah DISTINCT-dedup + FILTER pruning stages."""
+from .pipeline import TokenPipeline, PipelineStats

@@ -1,0 +1,102 @@
+"""Training data pipeline with Cheetah pruning as a first-class stage.
+
+Per-host token streams flow through:
+  1. DISTINCT dedup — document fingerprints through the d×w cache kernel
+     (paper Ex. 2/8): repeated documents never reach tokenization.
+  2. FILTER quality pruning — predicate decomposition (Ex. 1) on cheap
+     metadata columns; the "master" (the training step) sees survivors.
+The train step is the master: Q = "the unique, quality-passing training
+stream" and Q(A_Q(D)) = Q(D) holds by the algorithms' guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    seen_docs: int = 0
+    deduped_docs: int = 0
+    filtered_docs: int = 0
+    emitted_batches: int = 0
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    """Synthetic sharded corpus → dedup → filter → fixed-shape batches."""
+    vocab: int
+    seq_len: int
+    batch_size: int
+    dedup_d: int = 1024
+    dedup_w: int = 4
+    dedup_block: int = 16  # small host-side blocks → near-scan pruning rate
+    quality_min: float = 0.25
+    seed: int = 0
+    use_kernel: bool = True
+    stats: PipelineStats = dataclasses.field(default_factory=PipelineStats)
+
+    def corpus(self, num_docs: int, dup_fraction: float = 0.3):
+        """Synthetic docs with controlled duplication + quality scores."""
+        rng = np.random.default_rng(self.seed)
+        n_unique = max(1, int(num_docs * (1 - dup_fraction)))
+        base = [rng.integers(0, self.vocab, rng.integers(32, 4 * self.seq_len))
+                .astype(np.int32) for _ in range(n_unique)]
+        # each unique doc appears once; the remainder are true duplicates
+        docs = [(b, float(rng.random())) for b in base]
+        for _ in range(num_docs - n_unique):
+            docs.append((base[rng.integers(0, n_unique)], float(rng.random())))
+        rng.shuffle(docs)
+        return docs
+
+    def __iter__(self):
+        raise TypeError("call .batches(docs) with a corpus")
+
+    def batches(self, docs):
+        """Yield {tokens, labels} batches after pruning stages."""
+        # ---- stage 1: DISTINCT dedup on document fingerprints
+        fps = np.array([self._doc_fp(d) for d, _ in docs], np.uint32)
+        if self.use_kernel:
+            keep = np.asarray(kops.distinct_prune(
+                jnp.asarray(fps), d=self.dedup_d, w=self.dedup_w,
+                block=self.dedup_block))
+        else:
+            keep = np.asarray(core.distinct_prune(
+                jnp.asarray(fps), d=self.dedup_d, w=self.dedup_w).keep)
+        self.stats.seen_docs += len(docs)
+        self.stats.deduped_docs += int((~keep).sum())
+        # ---- stage 2: FILTER on metadata (quality predicate)
+        quality = jnp.asarray([q for _, q in docs], jnp.float32)
+        formula = core.Pred("quality", "gt", self.quality_min)
+        pr = core.filter_prune(formula, {"quality": quality},
+                               use_truthtable=False)
+        fkeep = np.asarray(pr.keep)
+        self.stats.filtered_docs += int((keep & ~fkeep).sum())
+        survivors = [d for (d, _), k, f in zip(docs, keep, fkeep) if k and f]
+        # ---- stage 3: pack to fixed [B, S+1] batches
+        buf: list[np.ndarray] = []
+        cur = np.empty(0, np.int32)
+        for doc in survivors:
+            cur = np.concatenate([cur, doc])
+            while cur.size >= self.seq_len + 1:
+                buf.append(cur[: self.seq_len + 1])
+                cur = cur[self.seq_len + 1:]
+                if len(buf) == self.batch_size:
+                    arr = np.stack(buf)
+                    self.stats.emitted_batches += 1
+                    yield {"tokens": jnp.asarray(arr[:, :-1]),
+                           "labels": jnp.asarray(arr[:, 1:])}
+                    buf = []
+
+    @staticmethod
+    def _doc_fp(tokens: np.ndarray) -> np.uint32:
+        h = core.fingerprint(jnp.asarray(tokens.astype(np.uint32)))
+        out = np.uint32(0)
+        for v in np.asarray(h).ravel()[:64]:
+            out = np.uint32((int(out) * 31 + int(v)) & 0xFFFFFFFF)
+        return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the Cheetah pruning hot path (paper §4/§7).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+validated in interpret mode against ref.py (pure-jnp oracle with
+identical block semantics). Public API in ops.py.
+"""
+from . import ops, ref

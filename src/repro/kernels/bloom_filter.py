@@ -1,0 +1,86 @@
+"""Pallas TPU kernels: Bloom filter build + probe (paper Ex. 4, JOIN).
+
+Bits are a f32[nbits] 0/1 vector in VMEM (the packed-word uint32 variant
+trades 32x memory for in-kernel shifts; f32 keeps the one-hot matmul
+probe on the MXU — noted in DESIGN.md as a deliberate TPU adaptation).
+Build: sequential grid, saturating add. Probe: parallel gather-min.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import gather_rows, hash_mod, onehot_f32
+
+
+def _build_kernel(nbits, H, seed, nblocks, k_ref, out_ref, b_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    keys = k_ref[...]
+    bits = b_ref[...]
+    for h in range(H):
+        idx = hash_mod(keys, nbits, seed + h * 101)
+        oh = onehot_f32(idx, nbits)
+        bits = jnp.minimum(bits + jnp.sum(oh, axis=0), 1.0)
+    b_ref[...] = bits
+
+    @pl.when(pl.program_id(0) == nblocks - 1)
+    def _emit():
+        out_ref[...] = b_ref[...]
+
+
+@partial(jax.jit, static_argnames=("nbits", "num_hashes", "block", "seed", "interpret"))
+def bloom_build_kernel(keys: jnp.ndarray, *, nbits: int, num_hashes: int = 3,
+                       block: int = 256, seed: int = 0,
+                       interpret: bool = True) -> jnp.ndarray:
+    m = keys.shape[0]
+    assert m % block == 0
+    assert nbits < (1 << 16)
+    nb = m // block
+    return pl.pallas_call(
+        partial(_build_kernel, nbits, num_hashes, seed, nb),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((nbits,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbits,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nbits,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(keys)
+
+
+def _query_kernel(nbits, H, seed, b_ref, k_ref, ok_ref):
+    keys = k_ref[...]
+    bits = b_ref[...]
+    ok = jnp.ones((keys.shape[0],), jnp.float32)
+    for h in range(H):
+        idx = hash_mod(keys, nbits, seed + h * 101)
+        oh = onehot_f32(idx, nbits)
+        got = gather_rows(oh, bits[:, None])[:, 0]
+        ok = jnp.minimum(ok, got)
+    ok_ref[...] = (ok > 0.5).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("num_hashes", "block", "seed", "interpret"))
+def bloom_query_kernel(bits: jnp.ndarray, keys: jnp.ndarray, *,
+                       num_hashes: int = 3, block: int = 256, seed: int = 0,
+                       interpret: bool = True) -> jnp.ndarray:
+    m = keys.shape[0]
+    nbits = bits.shape[0]
+    assert m % block == 0
+    return pl.pallas_call(
+        partial(_query_kernel, nbits, num_hashes, seed),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((nbits,), lambda i: (0,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+    )(bits, keys)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernels: Count-Min sketch build + query (paper Ex. 5, HAVING).
+
+Build: sequential grid over key blocks; the [rows, width] counter table
+lives in VMEM scratch and is emitted on the final step. Per row the
+scatter-add becomes onehot^T-weighted column sums (exact — addition is
+order-free). Query: embarrassingly parallel gather-min via one-hot
+matmuls against the table operand.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import gather_rows, hash_mod, onehot_f32
+
+
+def _build_kernel(rows, width, seed, nblocks, k_ref, w_ref, out_ref, t_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    keys = k_ref[...]
+    wts = w_ref[...].astype(jnp.float32)
+    for r in range(rows):  # rows is 2-4: unrolled stages, as on the switch
+        idx = hash_mod(keys, width, seed + r * 101)
+        oh = onehot_f32(idx, width)                    # [B, width]
+        t_ref[r, :] += jnp.sum(oh * wts[:, None], axis=0)
+
+    @pl.when(pl.program_id(0) == nblocks - 1)
+    def _emit():
+        out_ref[...] = t_ref[...]
+
+
+@partial(jax.jit, static_argnames=("rows", "width", "block", "seed", "interpret"))
+def cms_build_kernel(keys: jnp.ndarray, weights: jnp.ndarray, *, rows: int,
+                     width: int, block: int = 256, seed: int = 0,
+                     interpret: bool = True) -> jnp.ndarray:
+    m = keys.shape[0]
+    assert m % block == 0
+    assert width < (1 << 16)
+    nb = m // block
+    return pl.pallas_call(
+        partial(_build_kernel, rows, width, seed, nb),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((rows, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, width), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(keys, weights)
+
+
+def _query_kernel(rows, width, seed, t_ref, k_ref, est_ref):
+    keys = k_ref[...]
+    T = t_ref[...]
+    est = jnp.full((keys.shape[0],), jnp.float32(3.4e38))
+    for r in range(rows):
+        idx = hash_mod(keys, width, seed + r * 101)
+        oh = onehot_f32(idx, width)
+        got = gather_rows(oh, T[r, :][:, None])[:, 0]
+        est = jnp.minimum(est, got)
+    est_ref[...] = est
+
+
+@partial(jax.jit, static_argnames=("block", "seed", "interpret"))
+def cms_query_kernel(table: jnp.ndarray, keys: jnp.ndarray, *,
+                     block: int = 256, seed: int = 0,
+                     interpret: bool = True) -> jnp.ndarray:
+    m = keys.shape[0]
+    rows, width = table.shape
+    assert m % block == 0
+    return pl.pallas_call(
+        partial(_query_kernel, rows, width, seed),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((rows, width), lambda i: (0, 0)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(table, keys)

@@ -1,0 +1,62 @@
+"""Shared in-kernel helpers for the Cheetah pruning kernels.
+
+Design note (DESIGN.md §5): the switch's per-packet "hash to a row, read
+the row registers" becomes, on TPU, a block-of-B-entries one-hot matmul
+against the (d, w) VMEM state. One-hot gathers lower to MXU matmuls and
+avoid unsupported dynamic-gather shapes inside Pallas. Fingerprint values
+are carried as two exact f32 16-bit halves so equality survives the
+float path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# numpy scalars → jaxpr literals (jnp constants would be captured consts,
+# which pallas_call rejects)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_C3 = np.uint32(0x9E3779B9)
+
+NEG = np.float32(-3.4e38)
+
+
+def mix32(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """murmur3 fmix32 — identical math to repro.core.hashing.mix32."""
+    h = x ^ np.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_mod(x: jnp.ndarray, mod: int, seed: int = 0) -> jnp.ndarray:
+    """Range-reduce to {0..mod-1}; multiply-shift (mod < 2^16), else %."""
+    h = mix32(x, seed)
+    if mod < (1 << 16):
+        lo = h & np.uint32(0xFFFF)
+        hi = h >> 16
+        m = np.uint32(mod)
+        t = (hi * m) + ((lo * m) >> 16)
+        return (t >> 16).astype(jnp.int32)
+    return (h % np.uint32(mod)).astype(jnp.int32)
+
+
+def split16(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """uint32 → exact f32 halves (lo16, hi16)."""
+    return ((x & np.uint32(0xFFFF)).astype(jnp.float32),
+            (x >> 16).astype(jnp.float32))
+
+
+def onehot_f32(idx: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """[B] int32 → [B, depth] f32 one-hot via 2D broadcasted iota."""
+    cols = lax.broadcasted_iota(jnp.int32, (idx.shape[0], depth), 1)
+    return (cols == idx[:, None]).astype(jnp.float32)
+
+
+def gather_rows(onehot: jnp.ndarray, state: jnp.ndarray) -> jnp.ndarray:
+    """[B,d] one-hot @ [d,w] state → [B,w] per-entry row view (MXU)."""
+    return jnp.dot(onehot, state, preferred_element_type=jnp.float32)

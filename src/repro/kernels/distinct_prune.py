@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: DISTINCT d×w cache pruning (paper Ex. 2 / Table 2).
+
+The switch pipeline → sequential grid over stream blocks; the d×w
+register array → VMEM scratch carried across grid steps; the per-packet
+row lookup → a [B,d]×[d,w] one-hot matmul on the MXU. Values are carried
+as exact f32 16-bit halves (see kernels.common). FIFO policy (the paper's
+FIFO* variant — one shared-memory stage per cache column).
+
+VMEM budget: state is 3·d·w·4 bytes + d·4 (head) — e.g. d=4096, w=4 →
+~200 KB, comfortably inside the ~16 MB/core VMEM. Block size B controls
+the [B,d] one-hot working set: B=256, d=4096 → 4 MB f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import gather_rows, hash_mod, onehot_f32, split16
+
+
+def _kernel(d, w, seed, x_ref, keep_ref, slo_ref, shi_ref, val_ref, head_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        slo_ref[...] = jnp.zeros_like(slo_ref)
+        shi_ref[...] = jnp.zeros_like(shi_ref)
+        val_ref[...] = jnp.zeros_like(val_ref)
+        head_ref[...] = jnp.zeros_like(head_ref)
+
+    x = x_ref[...]
+    B = x.shape[0]
+    rows = hash_mod(x, d, seed)
+    oh = onehot_f32(rows, d)                     # [B, d]
+    g_lo = gather_rows(oh, slo_ref[...])         # [B, w]
+    g_hi = gather_rows(oh, shi_ref[...])
+    g_v = gather_rows(oh, val_ref[...])
+    x_lo, x_hi = split16(x)
+    hit = jnp.any((g_lo == x_lo[:, None]) & (g_hi == x_hi[:, None])
+                  & (g_v > 0.5), axis=1)
+    miss = ~hit
+    keep_ref[...] = miss.astype(jnp.int32)
+
+    # one insertion per row per block: the first missing entry of each row
+    iota = jax.lax.broadcasted_iota(jnp.float32, (B, 1), 0)[:, 0]
+    big = jnp.float32(B)
+    cand = jnp.where(miss, iota, big)
+    per_row_first = jnp.min(jnp.where(oh > 0.5, cand[:, None], big), axis=0)  # [d]
+    first_for_me = gather_rows(oh, per_row_first[:, None])[:, 0]
+    insert = miss & (first_for_me == iota)
+    ins_f = insert.astype(jnp.float32)
+    row_ins = jnp.max(jnp.where(oh > 0.5, ins_f[:, None], 0.0), axis=0)  # [d] 0/1
+    v_lo = jnp.sum(oh * (x_lo * ins_f)[:, None], axis=0)  # [d] (≤1 contributor)
+    v_hi = jnp.sum(oh * (x_hi * ins_f)[:, None], axis=0)
+    head = head_ref[...]
+    wcols = jax.lax.broadcasted_iota(jnp.int32, (d, w), 1)
+    hmask = (wcols == head[:, None]) & (row_ins[:, None] > 0.5)
+    slo_ref[...] = jnp.where(hmask, v_lo[:, None], slo_ref[...])
+    shi_ref[...] = jnp.where(hmask, v_hi[:, None], shi_ref[...])
+    val_ref[...] = jnp.where(hmask, 1.0, val_ref[...])
+    head_ref[...] = jnp.where(row_ins > 0.5, (head + 1) % w, head)
+
+
+@partial(jax.jit, static_argnames=("d", "w", "block", "seed", "interpret"))
+def distinct_prune_kernel(values: jnp.ndarray, *, d: int, w: int,
+                          block: int = 256, seed: int = 0,
+                          interpret: bool = True) -> jnp.ndarray:
+    """keep mask int32[m] for uint32[m] fingerprints (m % block == 0)."""
+    m = values.shape[0]
+    assert m % block == 0, "pad the stream to a multiple of block"
+    assert d < (1 << 16), "multiply-shift range reduction needs d < 2^16"
+    grid = (m // block,)
+    return pl.pallas_call(
+        partial(_kernel, d, w, seed),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((d, w), jnp.float32),  # value lo16
+            pltpu.VMEM((d, w), jnp.float32),  # value hi16
+            pltpu.VMEM((d, w), jnp.float32),  # valid
+            pltpu.VMEM((d,), jnp.int32),      # FIFO head
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(values)

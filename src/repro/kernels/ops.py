@@ -1,0 +1,113 @@
+"""Public jit'd dispatch for the Cheetah pruning kernels.
+
+On TPU the Pallas kernels run compiled (interpret=False); elsewhere they
+run in interpret mode so the *kernel bodies* execute (and are validated)
+on CPU. `use_ref=True` routes to the pure-jnp oracles in ref.py (same
+block semantics) — used for differential testing and as a safe fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bloom_filter import bloom_build_kernel, bloom_query_kernel
+from .cms_sketch import cms_build_kernel, cms_query_kernel
+from .distinct_prune import distinct_prune_kernel
+from .skyline_prune import skyline_prune_kernel
+from .topn_prune import topn_prune_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, block: int, fill):
+    m = x.shape[0]
+    pad = (-m) % block
+    if pad == 0:
+        return x, m
+    padshape = (pad,) + x.shape[1:]
+    return jnp.concatenate([x, jnp.full(padshape, fill, x.dtype)]), m
+
+
+def distinct_prune(values: jnp.ndarray, *, d: int, w: int, block: int = 256,
+                   seed: int = 0, use_ref: bool = False) -> jnp.ndarray:
+    """bool[m] keep mask (FIFO d×w cache, block semantics)."""
+    v, m = _pad_to(values, block, 0)
+    if use_ref:
+        keep = ref.distinct_block_ref(v, d=d, w=w, block=block, seed=seed)
+    else:
+        keep = distinct_prune_kernel(v, d=d, w=w, block=block, seed=seed,
+                                     interpret=_interpret())
+    return keep[:m].astype(bool)
+
+
+def topn_prune(values: jnp.ndarray, *, d: int, w: int, block: int = 256,
+               seed: int = 0, use_ref: bool = False) -> jnp.ndarray:
+    v, m = _pad_to(values.astype(jnp.float32), block, -3.4e38)
+    if use_ref:
+        keep = ref.topn_block_ref(v, d=d, w=w, block=block, seed=seed)
+    else:
+        keep = topn_prune_kernel(v, d=d, w=w, block=block, seed=seed,
+                                 interpret=_interpret())
+    return keep[:m].astype(bool)
+
+
+def cms_build(keys: jnp.ndarray, weights: jnp.ndarray, *, rows: int,
+              width: int, block: int = 256, seed: int = 0,
+              use_ref: bool = False) -> jnp.ndarray:
+    k, _ = _pad_to(keys, block, 0)
+    wts, _ = _pad_to(weights.astype(jnp.float32), block, 0.0)  # 0-weight pad
+    if use_ref:
+        return ref.cms_build_ref(k, wts, rows=rows, width=width, seed=seed)
+    return cms_build_kernel(k, wts, rows=rows, width=width, block=block,
+                            seed=seed, interpret=_interpret())
+
+
+def cms_query(table: jnp.ndarray, keys: jnp.ndarray, *, block: int = 256,
+              seed: int = 0, use_ref: bool = False) -> jnp.ndarray:
+    k, m = _pad_to(keys, block, 0)
+    if use_ref:
+        est = ref.cms_query_ref(table, k, seed=seed)
+    else:
+        est = cms_query_kernel(table, k, block=block, seed=seed,
+                               interpret=_interpret())
+    return est[:m]
+
+
+def bloom_build(keys: jnp.ndarray, *, nbits: int, num_hashes: int = 3,
+                block: int = 256, seed: int = 0,
+                use_ref: bool = False) -> jnp.ndarray:
+    k, m = _pad_to(keys, block, 0)
+    if m != k.shape[0]:
+        # padding would pollute the filter with key 0; pad by repeating a
+        # real key instead (idempotent inserts)
+        k = jnp.where(jnp.arange(k.shape[0]) < m, k, keys[0])
+    if use_ref:
+        return ref.bloom_build_ref(k, nbits=nbits, num_hashes=num_hashes, seed=seed)
+    return bloom_build_kernel(k, nbits=nbits, num_hashes=num_hashes,
+                              block=block, seed=seed, interpret=_interpret())
+
+
+def bloom_query(bits: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int = 3,
+                block: int = 256, seed: int = 0,
+                use_ref: bool = False) -> jnp.ndarray:
+    k, m = _pad_to(keys, block, 0)
+    if use_ref:
+        ok = ref.bloom_query_ref(bits, k, num_hashes=num_hashes, seed=seed)
+    else:
+        ok = bloom_query_kernel(bits, k, num_hashes=num_hashes, block=block,
+                                seed=seed, interpret=_interpret())
+    return ok[:m].astype(bool)
+
+
+def skyline_prune(points: jnp.ndarray, *, w: int, block: int = 256,
+                  score: str = "aph", use_ref: bool = False) -> jnp.ndarray:
+    p, m = _pad_to(points.astype(jnp.float32), block, 0.0)
+    if use_ref:
+        keep = ref.skyline_block_ref(p, w=w, block=block, score=score)
+    else:
+        keep = skyline_prune_kernel(p, w=w, block=block, score=score,
+                                    interpret=_interpret())
+    return keep[:m].astype(bool)

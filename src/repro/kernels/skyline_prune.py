@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: SKYLINE w-point pruning (paper Ex. 6).
+
+State: f32[w, D] points + f32[w] scores, kept descending by score in
+VMEM. Per block: dominance test of every entry against all stored points
+([B, w, D] elementwise — w, D are small), then w unrolled rounds of
+"extract block max by score → sorted insert" (the switch's per-stage
+replace-if-greater rolling minimum). Scores: SUM or APH (piecewise-linear
+log2 — the TCAM lookup analogue).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import NEG
+
+
+def _score(x, mode):
+    if mode == "sum":
+        return jnp.sum(x, axis=-1)
+    safe = jnp.maximum(x, 1.0)
+    e = jnp.floor(jnp.log2(safe))
+    lg = jnp.where(x >= 1.0, e + safe / jnp.exp2(e) - 1.0, -16.0)
+    return jnp.sum(lg, axis=-1)
+
+
+def _kernel(w, D, mode, x_ref, keep_ref, p_ref, s_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+        s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    x = x_ref[...]                                  # [B, D]
+    B = x.shape[0]
+    P, S = p_ref[...], s_ref[...]
+    dom = (jnp.all(x[:, None, :] <= P[None], axis=-1)
+           & jnp.any(x[:, None, :] < P[None], axis=-1)
+           & (S > NEG)[None, :])                    # [B, w]
+    keep_ref[...] = (~jnp.any(dom, axis=1)).astype(jnp.int32)
+
+    hx = _score(x, mode)                            # [B]
+    idxw = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)[:, 0]
+    for _ in range(w):                              # w switch stages
+        best = jnp.max(hx)
+        sel = (hx == best)
+        # first selected entry (ties broken by index)
+        iota = jax.lax.broadcasted_iota(jnp.float32, (B, 1), 0)[:, 0]
+        first = jnp.min(jnp.where(sel, iota, jnp.float32(B)))
+        pick = sel & (iota == first)
+        bx = jnp.sum(jnp.where(pick[:, None], x, 0.0), axis=0)  # [D]
+        do = best > S[-1]
+        pos = jnp.sum(best <= S)
+        rolledP = jnp.concatenate([P[:1], P[:-1]], axis=0)
+        rolledS = jnp.concatenate([S[:1], S[:-1]], axis=0)
+        P2 = jnp.where((idxw == pos)[:, None], bx[None, :],
+                       jnp.where((idxw > pos)[:, None], rolledP, P))
+        S2 = jnp.where(idxw == pos, best, jnp.where(idxw > pos, rolledS, S))
+        P = jnp.where(do, P2, P)
+        S = jnp.where(do, S2, S)
+        hx = jnp.where(pick, NEG, hx)
+    p_ref[...] = P
+    s_ref[...] = S
+
+
+@partial(jax.jit, static_argnames=("w", "block", "score", "interpret"))
+def skyline_prune_kernel(points: jnp.ndarray, *, w: int, block: int = 256,
+                         score: str = "aph", interpret: bool = True) -> jnp.ndarray:
+    """keep mask int32[m] for f32[m, D] points (m % block == 0)."""
+    m, D = points.shape
+    assert m % block == 0
+    return pl.pallas_call(
+        partial(_kernel, w, D, score),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block, D), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((w, D), jnp.float32),
+                        pltpu.VMEM((w,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(points.astype(jnp.float32))

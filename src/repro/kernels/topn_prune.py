@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: randomized TOP-N matrix pruning (paper Ex. 7, Fig 2).
+
+State: f32[d, w] per-row descending top-w values in VMEM. Per block:
+row assignment by hashed global index, keep = value >= row minimum
+(gathered via one-hot matmul), then a vectorized sorted-insert of each
+row's best block candidate (the paper's rolling-minimum stages collapse
+into one shift-and-select across all d rows at once).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import NEG, gather_rows, hash_mod, onehot_f32
+
+
+def _kernel(d, w, block, seed, x_ref, keep_ref, s_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    x = x_ref[...].astype(jnp.float32)
+    B = x.shape[0]
+    gidx = (pl.program_id(0) * block
+            + jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)[:, 0])
+    rows = hash_mod(gidx.astype(jnp.uint32), d, seed)
+    oh = onehot_f32(rows, d)                       # [B, d]
+    S = s_ref[...]
+    row_min = S[:, -1]                             # [d]
+    my_min = gather_rows(oh, row_min[:, None])[:, 0]
+    keep_ref[...] = (x >= my_min).astype(jnp.int32)
+
+    # per-row best block candidate → one sorted insert per row
+    cand = jnp.max(jnp.where(oh > 0.5, x[:, None], NEG), axis=0)  # [d]
+    do = cand > row_min
+    pos = jnp.sum(cand[:, None] <= S, axis=1)      # [d]
+    wcols = jax.lax.broadcasted_iota(jnp.int32, (d, w), 1)
+    rolled = jnp.concatenate([S[:, :1], S[:, :-1]], axis=1)  # roll right
+    shifted = jnp.where(wcols > pos[:, None], rolled, S)
+    inserted = jnp.where(wcols == pos[:, None], cand[:, None], shifted)
+    s_ref[...] = jnp.where(do[:, None], inserted, S)
+
+
+@partial(jax.jit, static_argnames=("d", "w", "block", "seed", "interpret"))
+def topn_prune_kernel(values: jnp.ndarray, *, d: int, w: int,
+                      block: int = 256, seed: int = 0,
+                      interpret: bool = True) -> jnp.ndarray:
+    """keep mask int32[m] for f32[m] values (m % block == 0)."""
+    m = values.shape[0]
+    assert m % block == 0
+    assert d < (1 << 16)
+    return pl.pallas_call(
+        partial(_kernel, d, w, block, seed),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((d, w), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(values.astype(jnp.float32))

@@ -1,0 +1,203 @@
+"""Cost analysis that survives lax.scan: jaxpr FLOPs + HLO collectives.
+
+XLA's compiled.cost_analysis() counts a while-loop body ONCE, so any
+scan-over-layers program is undercounted by the trip count (verified in
+EXPERIMENTS.md §Dry-run methodology). Two replacements:
+
+  * jaxpr_flops(fn, *args): walks the traced jaxpr, counting dot_general
+    FLOPs exactly and multiplying scan bodies by their length (remat
+    recompute included, since grad-of-checkpoint materializes it in the
+    jaxpr). Global (all-device) count, backend-independent.
+  * hlo_collectives(text): walks the partitioned HLO computations,
+    sums collective result bytes, multiplying while bodies by the trip
+    count recovered from the loop condition's comparison constant.
+    Per-device byte counts (the SPMD program is per-device).
+"""
+from __future__ import annotations
+
+import math
+import re
+from functools import lru_cache
+
+import jax
+
+
+# ------------------------------------------------------------- jaxpr side
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _flops_of_jaxpr(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            rhs = eqn.invars[1].aval
+            b = _prod(lhs.shape[i] for i in lb)
+            k = _prod(lhs.shape[i] for i in lc)
+            m = _prod(lhs.shape[i] for i in range(len(lhs.shape))
+                      if i not in lc and i not in lb)
+            n = _prod(rhs.shape[i] for i in range(len(rhs.shape))
+                      if i not in rc and i not in rb)
+            total += 2.0 * b * m * k * n
+        elif prim == "scan":
+            total += eqn.params["length"] * _flops_of_jaxpr(
+                eqn.params["jaxpr"].jaxpr)
+        elif prim == "while":
+            # we only emit bounded scans; count body once if reached
+            total += _flops_of_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max(_flops_of_jaxpr(b.jaxpr) for b in branches)
+        elif prim == "shard_map":
+            # body flops are per-device → scale by mesh size for global
+            mesh = eqn.params.get("mesh")
+            n = 1
+            try:
+                for _, s in tuple(mesh.shape.items()):
+                    n *= s
+            except Exception:  # noqa: BLE001
+                n = 1
+            total += n * _flops_of_jaxpr(eqn.params["jaxpr"])
+        else:
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                sub = eqn.params.get(key)
+                if sub is not None:
+                    j = getattr(sub, "jaxpr", sub)
+                    total += _flops_of_jaxpr(j)
+                    break
+    return total
+
+
+def jaxpr_flops(fn, *args, **kwargs) -> float:
+    """Global matmul FLOPs of fn(*args) with scan trip counts applied."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    return _flops_of_jaxpr(closed.jaxpr)
+
+
+# --------------------------------------------------------------- HLO side
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        # header: "%name (params...) -> rettype {" — params may nest parens
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if (m and stripped.endswith("{") and "->" in line
+                and "=" not in line.split("(")[0]):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def hlo_collectives(hlo: str) -> dict:
+    """Collective result bytes per op kind, while-trip-count aware."""
+    comps = _split_computations(hlo)
+
+    call_re = re.compile(
+        r"(?:calls=|to_apply=|condition=|body=)%?([\w.\-]+)")
+
+    def local_and_children(name):
+        local = {c: 0 for c in _COLLECTIVES}
+        counts = {c: 0 for c in _COLLECTIVES}
+        children = []  # (child_name, multiplier)
+        for line in comps.get(name, ()):
+            rhs = line.split("=", 1)[1] if "=" in line else line
+            for c in _COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", rhs):
+                    head = rhs.split(c, 1)[0]
+                    local[c] += _shape_bytes(head)
+                    counts[c] += 1
+                    break
+            if re.search(r"\bwhile\(", rhs):
+                m_body = re.search(r"body=%?([\w.\-]+)", rhs)
+                m_trip = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
+                if m_trip:
+                    trips = int(m_trip.group(1))
+                else:
+                    m_cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+                    trips = _trip_count(comps, m_cond.group(1)) if m_cond else 1
+                if m_body:
+                    children.append((m_body.group(1), trips))
+            else:
+                for callee in call_re.findall(rhs):
+                    if callee in comps:
+                        children.append((callee, 1))
+        return local, counts, children
+
+    memo: dict[str, tuple] = {}
+
+    def total(name, stack=()):
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return ({c: 0 for c in _COLLECTIVES}, {c: 0 for c in _COLLECTIVES})
+        local, counts, children = local_and_children(name)
+        for child, mult in children:
+            sub_b, sub_c = total(child, stack + (name,))
+            for c in _COLLECTIVES:
+                local[c] += mult * sub_b[c]
+                counts[c] += mult * sub_c[c]
+        memo[name] = (local, counts)
+        return memo[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:  # fall back: flat sum, no trip counts
+        entry_names = list(comps)
+    else:
+        entry_names = [entry]
+    agg_b = {c: 0 for c in _COLLECTIVES}
+    agg_c = {c: 0 for c in _COLLECTIVES}
+    for n in entry_names:
+        b, c = total(n)
+        for k in _COLLECTIVES:
+            agg_b[k] += b[k]
+            agg_c[k] += c[k]
+    return {"bytes": agg_b, "counts": agg_c,
+            "total_bytes": sum(agg_b.values())}
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Max integer constant in the loop condition ≈ trip count."""
+    best = 1
+    for line in comps.get(cond_name, ()):
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best

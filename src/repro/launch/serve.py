@@ -1,0 +1,52 @@
+"""Production serving driver: batched requests → dedup → prefill/decode
+with per-shard logit pruning.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+      --batch 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import LM
+from repro.serve import RequestCache, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(0))
+    eng = ServeEngine(lm, params, n_logit_shards=16)
+    rc = RequestCache()
+
+    rng = np.random.default_rng(0)
+    requests = [f"request-{i % max(args.batch - 1, 1)}"
+                for i in range(args.batch * 2)]  # contains duplicates
+    fresh, _ = rc.dedup(requests)
+    print(f"[serve] {len(requests)} requests → {len(fresh)} after dedup")
+    B = len(fresh)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       (B, args.prompt_len)).astype(np.int32))
+    t0 = time.time()
+    out = eng.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    print(f"[serve] {B}×{args.max_new} tokens in {dt:.1f}s "
+          f"({B*args.max_new/dt:.1f} tok/s)")
+    print("[serve] sample:", out[0][:10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Production training driver.
+
+On real hardware this runs under the production mesh; in this container
+it runs end-to-end on the host devices (CPU) with a reduced config —
+the same code path the dry-run lowers: pipeline → pruned data →
+microbatched train step → checkpoint/restart → elastic re-mesh hooks.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      [--smoke] [--steps 20] [--ckpt results/ckpt] [--compress]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get, get_smoke
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import LM, make_rules
+from repro.train import (AdamWConfig, CompressConfig, checkpoint, elastic,
+                         init_state, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt", default="results/ckpt_launch")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--state-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8"])
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n/1e6:.1f}M params on "
+          f"{len(jax.devices())} device(s)")
+
+    ccfg = CompressConfig(density=0.05) if args.compress else None
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=10, state_dtype=args.state_dtype)
+    step_fn = jax.jit(make_train_step(lm, None, ocfg,
+                                      microbatches=args.microbatches,
+                                      compress=ccfg))
+    state = init_state(lm, params, ocfg, compress=ccfg)
+
+    start = 0
+    last = checkpoint.latest_step(args.ckpt)
+    if last is not None:
+        restored = checkpoint.restore(args.ckpt, last,
+                                      {"params": params, "opt": state})
+        params, state = restored["params"], restored["opt"]
+        start = last
+        print(f"[train] resumed from checkpoint step {last}")
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         batch_size=args.batch, seed=0)
+    docs = pipe.corpus(2000, dup_fraction=0.3)
+    straggler = elastic.StragglerPolicy()
+    it = iter(pipe.batches(docs))
+    t0 = time.time()
+    for s in range(start, args.steps):
+        try:
+            batch = next(it)
+        except StopIteration:
+            it = iter(pipe.batches(docs))
+            batch = next(it)
+        ts = time.time()
+        params, state, stats = step_fn(params, state, batch)
+        jax.block_until_ready(stats["loss"])
+        straggler.step({"host0": (time.time() - ts) * 1e3})
+        if s % 5 == 0 or s == args.steps - 1:
+            print(f"[train] step {s} loss={float(stats['loss']):.4f} "
+                  f"gnorm={float(stats['grad_norm']):.2f}")
+        if s > 0 and s % 10 == 0:
+            checkpoint.save(args.ckpt, s, {"params": params, "opt": state},
+                            async_=True)
+    checkpoint.save(args.ckpt, args.steps, {"params": params, "opt": state})
+    print(f"[train] done in {time.time()-t0:.0f}s; pipeline pruned "
+          f"{pipe.stats.deduped_docs} dup + {pipe.stats.filtered_docs} "
+          f"low-quality docs of {pipe.stats.seen_docs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""LM substrate: attention/MoE/Mamba/RWKV blocks + pattern-scanned stack."""
+from .transformer import LM
+from .common import Rules, make_rules, tree_specs

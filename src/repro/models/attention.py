@@ -1,0 +1,290 @@
+"""Attention family: GQA/MQA (full, causal, sliding-window) and MLA.
+
+All variants share the contract:
+  init_*(col, cfg)                          -> params in the collector
+  apply_*(p, x, positions, rules, cfg, ...) -> y            (train/prefill)
+  decode_*(p, x1, cache, pos, rules, cfg)   -> y1, new_cache (one token)
+
+Sliding-window attention is computed chunked (queries attend to their own
++ previous chunk) so FLOPs scale with S·W, not S² — this is what makes
+the gemma3 local layers long-context viable. Decode against long caches
+uses a numerically-stable partial-softmax form that GSPMD can shard over
+the kv_seq axis (flash-decoding style cross-shard combine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamCollector, constrain, dense, rms_norm, rotary
+
+NEG_INF = -2.3e38
+
+
+# ------------------------------------------------------------------ GQA
+def init_gqa(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    L = layer_stack
+    col.param("wq", (L, d, H * dh), ("layers", "embed", "heads"))
+    col.param("wk", (L, d, K * dh), ("layers", "embed", "kv_heads"))
+    col.param("wv", (L, d, K * dh), ("layers", "embed", "kv_heads"))
+    col.param("wo", (L, H * dh, d), ("layers", "heads", "embed"))
+    if cfg.qk_norm:
+        col.param("q_norm", (L, dh), ("layers", None), init="ones")
+        col.param("k_norm", (L, dh), ("layers", None), init="ones")
+
+
+def _qkv(p, x, positions, cfg, window_rope_theta=None):
+    B, S, d = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, S, H, dh)
+    k = dense(x, p["wk"]).reshape(B, S, K, dh)
+    v = dense(x, p["wv"]).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    theta = window_rope_theta or cfg.rope_theta
+    q = rotary(q, positions, theta)
+    k = rotary(k, positions, theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, rules):
+    """q [B,Sq,H,dh], k/v [B,Sk,K,dh] → [B,Sq,H,dh]; GQA head grouping.
+
+    mask: "causal" | "full" — built from iota comparisons inline so XLA
+    fuses it into the softmax (a materialized tril constant gets hoisted
+    into scan carries: S² bytes of dead weight per layer group).
+    """
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    if mask == "causal":
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 1)
+        scores = jnp.where((kpos <= qpos)[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    o = o.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
+    return constrain(o, ("batch", "seq", "heads", None), rules)
+
+
+def apply_gqa(p, x, positions, rules, cfg, window: int | None = None):
+    """Causal attention; window != None → chunked sliding-window."""
+    B, S, d = x.shape
+    q, k, v = _qkv(p, x, positions, cfg)
+    q = constrain(q, ("batch", "seq", "heads", None), rules)
+    k = constrain(k, ("batch", "seq", "kv_heads", None), rules)
+    v = constrain(v, ("batch", "seq", "kv_heads", None), rules)
+    if window is None or window >= S:
+        o = _sdpa(q, k, v, "causal", rules)
+    else:
+        o = _windowed(q, k, v, window, rules)
+    y = dense(o.reshape(B, S, -1), p["wo"])
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def _windowed(q, k, v, W, rules):
+    """Chunked local attention: chunk C=W; attend to own + previous chunk."""
+    B, S0, H, dh = q.shape
+    K = k.shape[2]
+    C = min(W, S0)
+    pad = (-S0) % C
+    if pad:  # pad queries/keys to a chunk multiple; padding keys sit in
+        # the causal future of every real query, so they are masked out
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = S0 + pad
+    nc = S // C
+    qc = q.reshape(B, nc, C, H, dh)
+    kc = k.reshape(B, nc, C, K, dh)
+    vc = v.reshape(B, nc, C, K, dh)
+    prev_k = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    prev_v = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kk = jnp.concatenate([prev_k, kc], axis=2)  # [B, nc, 2C, K, dh]
+    vv = jnp.concatenate([prev_v, vc], axis=2)
+    G = H // K
+    qg = qc.reshape(B, nc, C, K, G, dh)
+    scores = jnp.einsum("bnqkgd,bnskd->bnkgqs", qg, kk,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    # causal + window + first-chunk validity
+    qpos = jnp.arange(C)[:, None] + C          # position within [prev|own]
+    kpos = jnp.arange(2 * C)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - W)
+    first = jnp.arange(nc)[:, None, None] > 0  # prev chunk invalid at n=0
+    ok = ok[None] & (first | (kpos[None] >= C))
+    scores = jnp.where(ok[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bnkgqs,bnskd->bnqkgd", w, vv,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, S, H, dh)[:, :S0]
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, layer_stack: int,
+                   dtype=jnp.bfloat16):
+    K, dh = cfg.n_kv, cfg.hd
+    shape = (layer_stack, batch, max_len, K, dh)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}, \
+           {"k": axes, "v": axes}
+
+
+def decode_gqa(p, x1, cache, pos, rules, cfg, window: int | None = None):
+    """One-token decode. x1 [B,1,d]; cache k/v [B,Smax,K,dh]; pos scalar."""
+    B = x1.shape[0]
+    H, K, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k1, v1 = _qkv(p, x1, positions, cfg)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                      (0, pos, 0, 0))
+    ck = constrain(ck, ("batch", "kv_seq", "kv_heads", None), rules)
+    cv = constrain(cv, ("batch", "kv_seq", "kv_heads", None), rules)
+    Smax = ck.shape[1]
+    kpos = jnp.arange(Smax)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= kpos > pos - window
+    G = H // K
+    qg = q.reshape(B, K, G, dh)
+    # stable partial softmax (shardable over kv_seq): fp32 throughout
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                   preferred_element_type=jnp.float32) / (dh ** 0.5)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - mx)
+    num = jnp.einsum("bkgs,bskd->bkgd", e, cv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(e, axis=-1, keepdims=True)
+    o = (num / den).astype(x1.dtype).reshape(B, 1, H * dh)
+    y = dense(o, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    L = layer_stack
+    col.param("wq_a", (L, d, m.q_lora_rank), ("layers", "embed", None))
+    col.param("q_a_norm", (L, m.q_lora_rank), ("layers", None), init="ones")
+    col.param("wq_b", (L, m.q_lora_rank, H * (m.qk_nope + m.qk_rope)),
+              ("layers", None, "heads"))
+    col.param("wkv_a", (L, d, m.kv_lora_rank + m.qk_rope), ("layers", "embed", None))
+    col.param("kv_a_norm", (L, m.kv_lora_rank), ("layers", None), init="ones")
+    col.param("wk_b", (L, m.kv_lora_rank, H * m.qk_nope), ("layers", None, "heads"))
+    col.param("wv_b", (L, m.kv_lora_rank, H * m.v_dim), ("layers", None, "heads"))
+    col.param("wo", (L, H * m.v_dim, d), ("layers", "heads", "embed"))
+
+
+def apply_mla(p, x, positions, rules, cfg, window=None):
+    """Train/prefill MLA (materialized K/V per head)."""
+    B, S, d = x.shape
+    H, m = cfg.n_heads, cfg.mla
+    q = dense(rms_norm(dense(x, p["wq_a"]), p["q_a_norm"]), p["wq_b"])
+    q = q.reshape(B, S, H, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    kv = dense(x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"])
+    k_rope = rotary(kv[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    q_rope = rotary(q_rope, positions, cfg.rope_theta)
+    k_nope = dense(c_kv, p["wk_b"]).reshape(B, S, H, m.qk_nope)
+    v = dense(c_kv, p["wv_b"]).reshape(B, S, H, m.v_dim)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope))], -1)
+    qf = constrain(qf, ("batch", "seq", "heads", None), rules)
+    kf = constrain(kf, ("batch", "seq", "heads", None), rules)
+    v = constrain(v, ("batch", "seq", "heads", None), rules)
+    o = _sdpa(qf, kf, v, "causal", rules)
+    y = dense(o.reshape(B, S, -1), p["wo"])
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, layer_stack: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    ax = ("layers", "batch", "kv_seq", None)
+    return ({"c_kv": jnp.zeros((layer_stack, batch, max_len, m.kv_lora_rank), dtype),
+             "k_rope": jnp.zeros((layer_stack, batch, max_len, m.qk_rope), dtype)},
+            {"c_kv": ax, "k_rope": ax})
+
+
+def decode_mla(p, x1, cache, pos, rules, cfg, window=None):
+    """Matrix-absorbed MLA decode: attention in the latent space."""
+    B = x1.shape[0]
+    H, m = cfg.n_heads, cfg.mla
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = dense(rms_norm(dense(x1, p["wq_a"]), p["q_a_norm"]), p["wq_b"])
+    q = q.reshape(B, H, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = rotary(q_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    kv = dense(x1, p["wkv_a"])[:, 0]
+    c_new = rms_norm(kv[:, :m.kv_lora_rank], p["kv_a_norm"])
+    kr_new = rotary(kv[:, None, None, m.kv_lora_rank:], positions,
+                    cfg.rope_theta)[:, 0, 0]
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                      c_new[:, None].astype(cache["c_kv"].dtype),
+                                      (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                      kr_new[:, None].astype(cache["k_rope"].dtype),
+                                      (0, pos, 0))
+    ck = constrain(ck, ("batch", "kv_seq", None), rules)
+    kr = constrain(kr, ("batch", "kv_seq", None), rules)
+    # absorb W_UK into q: q_lat [B,H,kv_rank]
+    wkb = p["wk_b"].reshape(m.kv_lora_rank, H, m.qk_nope)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, wkb,
+                       preferred_element_type=jnp.float32).astype(x1.dtype)
+    Smax = ck.shape[1]
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, ck, preferred_element_type=jnp.float32)
+         + jnp.einsum("bhn,bsn->bhs", q_rope, kr, preferred_element_type=jnp.float32)
+         ) / ((m.qk_nope + m.qk_rope) ** 0.5)
+    valid = jnp.arange(Smax) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - mx)
+    o_lat = jnp.einsum("bhs,bsr->bhr", e, ck.astype(jnp.float32))
+    o_lat = (o_lat / jnp.sum(e, -1, keepdims=True)).astype(x1.dtype)
+    wvb = p["wv_b"].reshape(m.kv_lora_rank, H, m.v_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wvb,
+                   preferred_element_type=jnp.float32).astype(x1.dtype)
+    y = dense(o.reshape(B, 1, H * m.v_dim), p["wo"])
+    return y, {"c_kv": ck, "k_rope": kr}
+
+
+# ------------------------------------------------- encoder / cross attn
+def apply_bidir(p, x, positions, rules, cfg):
+    """Encoder self-attention (no causal mask)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg)
+    o = _sdpa(q, k, v, "full", rules)
+    return constrain(dense(o.reshape(B, S, -1), p["wo"]),
+                     ("batch", "seq", "embed"), rules)
+
+
+def init_cross(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    L = layer_stack
+    col.param("wq", (L, d, H * dh), ("layers", "embed", "heads"))
+    col.param("wk", (L, d, K * dh), ("layers", "embed", "kv_heads"))
+    col.param("wv", (L, d, K * dh), ("layers", "embed", "kv_heads"))
+    col.param("wo", (L, H * dh, d), ("layers", "heads", "embed"))
+
+
+def apply_cross(p, x, enc, rules, cfg):
+    """Decoder cross-attention over encoder outputs [B, Senc, d]."""
+    B, S, _ = x.shape
+    Senc = enc.shape[1]
+    H, K, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, S, H, dh)
+    k = dense(enc, p["wk"]).reshape(B, Senc, K, dh)
+    v = dense(enc, p["wv"]).reshape(B, Senc, K, dh)
+    o = _sdpa(q, k, v, "full", rules)
+    return constrain(dense(o.reshape(B, S, -1), p["wo"]),
+                     ("batch", "seq", "embed"), rules)

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP sharding.
+
+Dispatch uses sort-based ranking (no [T,E] cumsum blow-up) into fixed
+[E, C, d] buffers — the scatter/gather is data movement (all-to-all under
+EP sharding via GSPMD), and the expert compute is a flop-exact batched
+einsum E·C·d·ff, so cost_analysis reflects real MoE arithmetic, i.e.
+~top_k·T·d·ff, not a dense all-experts product. Overflowed tokens are
+dropped (standard capacity-factor semantics; the residual path carries
+them — the same superset-safety argument as Cheetah's pruning, see
+DESIGN.md). Shared experts run dense alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, ParamCollector, constrain, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_experts: int = 1
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+def init_moe(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d = cfg.d_model
+    m: MoECfg = cfg.moe
+    L = layer_stack
+    col.param("router", (L, d, m.num_experts), ("layers", "embed", None),
+              dtype=jnp.float32)
+    col.param("wi_gate", (L, m.num_experts, d, m.d_ff_expert),
+              ("layers", "experts", "embed", "mlp"))
+    col.param("wi_up", (L, m.num_experts, d, m.d_ff_expert),
+              ("layers", "experts", "embed", "mlp"))
+    col.param("wo_e", (L, m.num_experts, m.d_ff_expert, d),
+              ("layers", "experts", "mlp", "embed"))
+    if m.shared_experts:
+        ff = m.d_ff_expert * m.shared_experts
+        col.param("ws_gate", (L, d, ff), ("layers", "embed", "mlp"))
+        col.param("ws_up", (L, d, ff), ("layers", "embed", "mlp"))
+        col.param("ws_down", (L, ff, d), ("layers", "mlp", "embed"))
+
+
+def apply_moe(p, x, rules, cfg):
+    """x [B, S, d] → [B, S, d]. Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    m: MoECfg = cfg.moe
+    act = ACTIVATIONS[cfg.act]
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)           # [T, k]
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)      # renormalize
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], m.num_experts), axis=0)
+    aux = m.router_aux_weight * m.num_experts * jnp.sum(me * ce)
+
+    # ---- sort-based position-in-expert ranking (no [T,E] materialization)
+    flat_e = top_e.reshape(-1)                              # [T*k]
+    Tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first_of = jnp.searchsorted(sorted_e, jnp.arange(m.num_experts))
+    rank_sorted = jnp.arange(Tk) - first_of[sorted_e]
+    pos = jnp.zeros(Tk, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    # capacity: at small T (decode) an expert can receive at most T tokens —
+    # give full capacity so no user-visible token ever drops
+    C = int(max(-(-T * m.top_k // m.num_experts) * m.capacity_factor,
+                min(T, 256)))
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                         # C = overflow slot
+
+    # ---- dispatch: [E, C+1, d] buffers (slot C collects dropped tokens)
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = jnp.zeros((m.num_experts, C + 1, d), x.dtype)
+    buf = buf.at[flat_e, pos_c].set(xt[tok_idx])
+    buf = buf[:, :C]
+    buf = constrain(buf, ("experts", None, "embed"), rules)
+
+    # ---- expert FFN (flop-exact grouped compute)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"],
+                       preferred_element_type=jnp.float32).astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    eo = jnp.einsum("ecf,efd->ecd", h * u, p["wo_e"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    eo = constrain(eo, ("experts", None, "embed"), rules)
+
+    # ---- combine: gather back, weight by router prob, drop overflow
+    eo_pad = jnp.concatenate([eo, jnp.zeros((m.num_experts, 1, d), eo.dtype)], 1)
+    out_flat = eo_pad[flat_e, pos_c]                        # [T*k, d]
+    w = (top_p.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.sum((out_flat * w[:, None]).reshape(T, m.top_k, d), axis=1)
+
+    if m.shared_experts:
+        hs = act(dense(xt, p["ws_gate"])) * dense(xt, p["ws_up"])
+        y = y + dense(hs, p["ws_down"])
+    y = y.reshape(B, S, d)
+    return constrain(y, ("batch", "seq", "embed"), rules), aux

@@ -1,0 +1,176 @@
+"""RWKV-6 (Finch) time-mix + channel-mix — chunked linear recurrence.
+
+Per head (dh channels): S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;
+o_t = r_tᵀ·(S_{t-1} + diag(u)·k_t v_tᵀ), with data-dependent decay w_t
+(token-shift + low-rank head). Chunked evaluation: within a chunk of
+length L the decay ratios are applied via log-space cumulative sums
+(r̃ = r·e^{logD}, k̃ = k·e^{-logD}, fp32, L ≤ 64 keeps the dynamic range
+safe); cross-chunk state [H, dh, dh] propagates through a lax.scan.
+Decode carries (S, last-token shift) — constant-size state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamCollector, constrain, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVCfg:
+    head_dim: int = 64
+    decay_lora: int = 64
+
+
+def init_rwkv_tmix(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d = cfg.d_model
+    L = layer_stack
+    rc: RWKVCfg = cfg.rwkv
+    for n in ("mix_r", "mix_k", "mix_v", "mix_w", "mix_g"):
+        col.param(n, (L, d), ("layers", "embed"), init="ones")
+    col.param("wr", (L, d, d), ("layers", "embed", "heads"))
+    col.param("wk", (L, d, d), ("layers", "embed", "heads"))
+    col.param("wv", (L, d, d), ("layers", "embed", "heads"))
+    col.param("wg", (L, d, d), ("layers", "embed", "heads"))
+    col.param("w_lora_a", (L, d, rc.decay_lora), ("layers", "embed", None))
+    col.param("w_lora_b", (L, rc.decay_lora, d), ("layers", None, "heads"))
+    col.param("w_base", (L, d), ("layers", "heads"), init="zeros", dtype=jnp.float32)
+    # ones (not zeros): with u=0, the first token of every chunk outputs
+    # exactly 0 and the output groupnorm's rsqrt(eps) amplifies gradients
+    col.param("u_bonus", (L, d), ("layers", "heads"), init="ones", dtype=jnp.float32)
+    col.param("ln_out", (L, d), ("layers", "heads"), init="ones")
+    col.param("wo", (L, d, d), ("layers", "heads", "embed"))
+
+
+def _tshift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried last token at t=0)."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _heads(x, H, dh):
+    B, S, _ = x.shape
+    return x.reshape(B, S, H, dh)
+
+
+def _rkvwg(p, x, xprev, cfg):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    dh = cfg.rwkv.head_dim
+    mix = lambda m: x * p[m][None, None] + xprev * (1 - p[m][None, None])
+    r = _heads(dense(mix("mix_r"), p["wr"]), H, dh)
+    k = _heads(dense(mix("mix_k"), p["wk"]), H, dh)
+    v = _heads(dense(mix("mix_v"), p["wv"]), H, dh)
+    g = jax.nn.silu(dense(mix("mix_g"), p["wg"]))
+    wl = dense(jnp.tanh(dense(mix("mix_w"), p["w_lora_a"])), p["w_lora_b"])
+    logw = -jnp.exp(p["w_base"][None, None].astype(jnp.float32)
+                    + wl.astype(jnp.float32))  # log-decay < 0
+    # stabilization (FLA-style): clamp per-step log-decay so that within a
+    # 16-token sub-chunk cumulative ratios stay inside fp32 range
+    # (16 × 5 = 80 < log(f32max) ≈ 88.7); e^-5 per-token decay is ~0.007.
+    logw = jnp.clip(logw, -5.0, -1e-5)
+    logw = _heads(logw, H, dh)
+    u = p["u_bonus"].reshape(H, dh).astype(jnp.float32)
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), g, logw, u)
+
+
+def _wkv_chunked(r, k, v, logw, u, S0, chunk: int = 16):
+    """r,k,v,logw [B,S,H,dh]; u [H,dh]; S0 [B,H,dh,dh] → o, S_T. fp32."""
+    B, S, H, dh = r.shape
+    L = min(chunk, S)
+    nc = S // L
+    rc = r.reshape(B, nc, L, H, dh).transpose(1, 0, 3, 2, 4)  # [nc,B,H,L,dh]
+    kc = k.reshape(B, nc, L, H, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, L, H, dh).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(B, nc, L, H, dh).transpose(1, 0, 3, 2, 4)
+
+    def body(Sst, xs):
+        rl, kl, vl, wl = xs                  # [B,H,L,dh]
+        lcum = jnp.cumsum(wl, axis=2)        # logD_t (inclusive)
+        lprev = lcum - wl                    # logD_{t-1}
+        r_in = rl * jnp.exp(lprev)           # for S0 term + intra ratios
+        k_in = kl * jnp.exp(-lcum)
+        # intra-chunk (strictly lower triangular) + bonus diagonal
+        att = jnp.einsum("bhld,bhmd->bhlm", r_in, k_in)   # ratio-correct
+        tril = jnp.tril(jnp.ones((L, L), jnp.bool_), k=-1)
+        att = jnp.where(tril[None, None], att, 0.0)
+        bonus = jnp.einsum("bhld,hd,bhld->bhl", rl, u, kl)
+        o = (jnp.einsum("bhlm,bhmd->bhld", att, vl)
+             + jnp.einsum("bhld,bhde->bhle", r_in, Sst)
+             + bonus[..., None] * vl)
+        # state to end of chunk
+        dec_rest = jnp.exp(lcum[:, :, -1:] - lcum)        # ∏_{s=t+1..L} w
+        S_new = (Sst * jnp.exp(lcum[:, :, -1])[..., None]
+                 + jnp.einsum("bhld,bhle->bhde", kl * dec_rest, vl))
+        return S_new, o
+
+    S_T, os_ = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)
+    return o, S_T
+
+
+def _groupnorm(o, gamma, H, dh, eps=1e-5):
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + eps)
+    return o.reshape(*o.shape[:-2], H * dh) * gamma
+
+
+def apply_rwkv_tmix(p, x, rules, cfg, chunk: int = 16):
+    B, S, d = x.shape
+    H, dh = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    r, k, v, g, logw, u = _rkvwg(p, x, _tshift(x), cfg)
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    o, _ = _wkv_chunked(r, k, v, logw, u, S0, chunk)
+    o = _groupnorm(o, p["ln_out"][None, None], H, dh).astype(x.dtype)
+    y = dense(o * g, p["wo"])
+    return constrain(y, ("batch", "seq", "embed"), rules)
+
+
+def init_rwkv_state(cfg, batch: int, layer_stack: int):
+    d = cfg.d_model
+    H, dh = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    return ({"S": jnp.zeros((layer_stack, batch, H, dh, dh), jnp.float32),
+             "x_tm": jnp.zeros((layer_stack, batch, 1, d), jnp.bfloat16),
+             "x_cm": jnp.zeros((layer_stack, batch, 1, d), jnp.bfloat16)},
+            {"S": ("layers", "batch", "heads", None, None),
+             "x_tm": ("layers", "batch", None, "embed"),
+             "x_cm": ("layers", "batch", None, "embed")})
+
+
+def decode_rwkv_tmix(p, x1, state_S, x_last, rules, cfg):
+    B = x1.shape[0]
+    d = cfg.d_model
+    H, dh = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    r, k, v, g, logw, u = _rkvwg(p, x1, _tshift(x1, x_last), cfg)
+    r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], jnp.exp(logw[:, 0])
+    o = (jnp.einsum("bhd,bhde->bhe", r1, state_S)
+         + jnp.einsum("bhd,hd,bhd,bhe->bhe", r1, u, k1, v1))
+    S_new = state_S * w1[..., None] + jnp.einsum("bhd,bhe->bhde", k1, v1)
+    o = _groupnorm(o, p["ln_out"][None], H, dh).astype(x1.dtype)
+    y = dense((o * g[:, 0])[:, None], p["wo"])
+    return y, S_new
+
+
+# --------------------------------------------------------- channel mix
+def init_rwkv_cmix(col: ParamCollector, cfg, layer_stack: int) -> None:
+    d, ff = cfg.d_model, cfg.d_ff
+    L = layer_stack
+    col.param("mix_k", (L, d), ("layers", "embed"), init="ones")
+    col.param("mix_r", (L, d), ("layers", "embed"), init="ones")
+    col.param("wk_c", (L, d, ff), ("layers", "embed", "mlp"))
+    col.param("wv_c", (L, ff, d), ("layers", "mlp", "embed"))
+    col.param("wr_c", (L, d, d), ("layers", "embed", "heads"))
+
+
+def apply_rwkv_cmix(p, x, rules, cfg, x_last=None):
+    xprev = _tshift(x, x_last)
+    mix = lambda m: x * p[m][None, None] + xprev * (1 - p[m][None, None])
+    kk = jnp.square(jax.nn.relu(dense(mix("mix_k"), p["wk_c"])))
+    kk = constrain(kk, ("batch", "seq", "mlp"), rules)
+    rr = jax.nn.sigmoid(dense(mix("mix_r"), p["wr_c"]))
+    return constrain(rr * dense(kk, p["wv_c"]), ("batch", "seq", "embed"), rules)

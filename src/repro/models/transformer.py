@@ -1,0 +1,467 @@
+"""Model assembly: pattern-blocked transformer stack for all 10 archs.
+
+Layers are grouped by the arch's repeating pattern (e.g. gemma3's
+5×local+1×global, jamba's 1×attn+7×mamba) and scanned over groups with
+stacked parameters — one group's HLO regardless of depth, which keeps the
+512-device dry-run compile tractable and gives remat a natural boundary.
+A non-divisible remainder runs as an unrolled "tail". Encoder–decoder
+(seamless) wires a bidirectional encoder stack + causal/cross decoder.
+
+Public entry points: LM.init / LM.loss / LM.prefill / LM.decode_step /
+LM.init_cache — all pure functions over (params, batch) pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import rwkv as rwk
+from .common import (ACTIVATIONS, ParamCollector, Rules, constrain, dense,
+                     rms_norm, tree_specs)
+
+
+# ------------------------------------------------------------- dense FFN
+def init_ffn(col: ParamCollector, cfg, L: int) -> None:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.ffn_glu:
+        col.param("wi_gate", (L, d, ff), ("layers", "embed", "mlp"))
+        col.param("wi_up", (L, d, ff), ("layers", "embed", "mlp"))
+    else:
+        col.param("wi", (L, d, ff), ("layers", "embed", "mlp"))
+    col.param("wo", (L, ff, d), ("layers", "mlp", "embed"))
+
+
+def apply_ffn(p, x, rules, cfg):
+    act = ACTIVATIONS[cfg.act]
+    if cfg.ffn_glu:
+        h = act(dense(x, p["wi_gate"])) * dense(x, p["wi_up"])
+    else:
+        h = act(dense(x, p["wi"]))
+    h = constrain(h, ("batch", "seq", "mlp"), rules)
+    return constrain(dense(h, p["wo"]), ("batch", "seq", "embed"), rules)
+
+
+# ------------------------------------------------------------ block init
+_MIXER_INIT = {
+    "global": attn.init_gqa, "local": attn.init_gqa, "bidir": attn.init_gqa,
+    "mla": attn.init_mla,
+    "mamba": lambda col, cfg, L: mam.init_mamba(col, cfg, L),
+    "rwkv": lambda col, cfg, L: rwk.init_rwkv_tmix(col, cfg, L),
+}
+
+
+def _init_blocks(col: ParamCollector, cfg, pattern, L: int, cross: bool = False):
+    for i, (mixer, ffn) in enumerate(pattern):
+        b = col.sub(f"blk{i}")
+        b.param("ln1", (L, cfg.d_model), ("layers", "embed"), init="ones")
+        _MIXER_INIT[mixer](b.sub("mixer"), cfg, L)
+        if cross:
+            b.param("ln_x", (L, cfg.d_model), ("layers", "embed"), init="ones")
+            attn.init_cross(b.sub("cross"), cfg, L)
+        if ffn != "none":
+            b.param("ln2", (L, cfg.d_model), ("layers", "embed"), init="ones")
+            f = b.sub("ffn")
+            if ffn == "dense":
+                init_ffn(f, cfg, L)
+            elif ffn == "moe":
+                moe_mod.init_moe(f, cfg, L)
+            elif ffn == "cmix":
+                rwk.init_rwkv_cmix(f, cfg, L)
+
+
+def _apply_block(bp, x, aux, mixer, ffn, positions, rules, cfg, enc=None):
+    h = rms_norm(x, bp["ln1"])
+    mp = bp["mixer"]
+    if mixer == "global":
+        a = attn.apply_gqa(mp, h, positions, rules, cfg, window=None)
+    elif mixer == "local":
+        a = attn.apply_gqa(mp, h, positions, rules, cfg, window=cfg.window)
+    elif mixer == "bidir":
+        a = attn.apply_bidir(mp, h, positions, rules, cfg)
+    elif mixer == "mla":
+        a = attn.apply_mla(mp, h, positions, rules, cfg)
+    elif mixer == "mamba":
+        a = mam.apply_mamba(mp, h, rules, cfg)
+    elif mixer == "rwkv":
+        a = rwk.apply_rwkv_tmix(mp, h, rules, cfg)
+    else:  # pragma: no cover
+        raise KeyError(mixer)
+    x = x + a
+    if enc is not None:
+        hx = rms_norm(x, bp["ln_x"])
+        x = x + attn.apply_cross(bp["cross"], hx, enc, rules, cfg)
+    if ffn != "none":
+        h2 = rms_norm(x, bp["ln2"])
+        if ffn == "dense":
+            x = x + apply_ffn(bp["ffn"], h2, rules, cfg)
+        elif ffn == "moe":
+            if getattr(cfg, "moe_impl", "gspmd") == "a2a" and rules is not None:
+                from . import moe_a2a
+                y, al = moe_a2a.apply_moe_a2a(
+                    bp["ffn"], h2, rules, cfg,
+                    int8_dispatch=getattr(cfg, "moe_int8_dispatch", False))
+            else:
+                y, al = moe_mod.apply_moe(bp["ffn"], h2, rules, cfg)
+            x = x + y
+            aux = aux + al
+        elif ffn == "cmix":
+            x = x + rwk.apply_rwkv_cmix(bp["ffn"], h2, rules, cfg)
+    return x, aux
+
+
+# ---------------------------------------------------------------- model
+@dataclasses.dataclass
+class LM:
+    cfg: "ArchConfig"  # noqa: F821 — repro.configs.base.ArchConfig
+
+    # ---------------------------------------------------------- init
+    def init(self, key) -> tuple[dict, dict]:
+        cfg = self.cfg
+        col = ParamCollector(key=key)
+        d, V = cfg.d_model, cfg.vocab_padded
+        # d^-0.5 init + ×√d input scaling → unit-variance inputs AND sane
+        # tied-unembed logits (gemma-style)
+        col.param("embed", (V, d), ("vocab", "embed"), scale=d ** -0.5)
+        if cfg.n_enc_layers:
+            _init_blocks(col.sub("enc_groups"), cfg, (("bidir", "dense"),),
+                         cfg.n_enc_layers)
+            col.param("enc_ln", (d,), ("embed",), init="ones")
+            _init_blocks(col.sub("groups"), cfg, cfg.pattern, cfg.n_groups,
+                         cross=True)
+        else:
+            _init_blocks(col.sub("groups"), cfg, cfg.pattern, cfg.n_groups)
+            if cfg.n_tail:
+                _init_blocks(col.sub("tail"), cfg,
+                             cfg.pattern[: cfg.n_tail], 1)
+        col.param("final_ln", (d,), ("embed",), init="ones")
+        if not cfg.tie_embeddings:
+            col.param("unembed", (d, V), ("embed", "vocab"))
+        return col.params, col.axes
+
+    def param_specs(self, axes: dict, rules: Rules):
+        return tree_specs(axes, rules.param)
+
+    # ------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch, rules):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0) * (cfg.d_model ** 0.5)
+        x = x.astype(jnp.bfloat16)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype),
+                                 x[:, cfg.frontend_len:]], axis=1)
+        return constrain(x, ("batch", "seq", "embed"), rules)
+
+    def forward(self, params, batch, rules: Rules):
+        """Full causal forward → (hidden [B,S,d], aux_loss)."""
+        cfg = self.cfg
+        if cfg.n_enc_layers:
+            return self._forward_encdec(params, batch, rules)
+        x = self._embed_inputs(params, batch, rules)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        body = partial(self._group_body, positions=positions, rules=rules)
+        if cfg.n_groups:
+            def scan_f(carry, gp):
+                return jax.checkpoint(body)(carry, gp), None
+            (x, aux), _ = jax.lax.scan(scan_f, (x, jnp.float32(0.0)),
+                                       params["groups"])
+        else:
+            aux = jnp.float32(0.0)
+        if cfg.n_tail:
+            tp = jax.tree.map(lambda a: a[0], params["tail"])
+            x, aux = self._tail_body((x, aux), tp, positions, rules)
+        x = rms_norm(x, params["final_ln"])
+        return x, aux
+
+    def _group_body(self, carry, gp, positions, rules, enc=None):
+        x, aux = carry
+        for i, (mixer, ffn) in enumerate(self.cfg.pattern):
+            bp = gp[f"blk{i}"]
+            x, aux = _apply_block(bp, x, aux, mixer, ffn, positions, rules,
+                                  self.cfg, enc=enc)
+        return x, aux
+
+    def _tail_body(self, carry, tp, positions, rules):
+        x, aux = carry
+        for i, (mixer, ffn) in enumerate(self.cfg.pattern[: self.cfg.n_tail]):
+            x, aux = _apply_block(tp[f"blk{i}"], x, aux, mixer, ffn,
+                                  positions, rules, self.cfg)
+        return x, aux
+
+    def _forward_encdec(self, params, batch, rules):
+        cfg = self.cfg
+        enc_x = batch["frame_embeds"].astype(jnp.bfloat16)
+        enc_x = constrain(enc_x, ("batch", "seq", "embed"), rules)
+        B, Se, _ = enc_x.shape
+        epos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+
+        def enc_scan(carry, gp):
+            body = partial(self._enc_body, positions=epos, rules=rules)
+            return jax.checkpoint(body)(carry, gp), None
+
+        (enc_x, aux), _ = jax.lax.scan(enc_scan, (enc_x, jnp.float32(0.0)),
+                                       params["enc_groups"])
+        enc_out = rms_norm(enc_x, params["enc_ln"])
+
+        x = jnp.take(params["embed"], batch["tokens"], axis=0) * (cfg.d_model ** 0.5)
+        x = constrain(x.astype(jnp.bfloat16), ("batch", "seq", "embed"), rules)
+        S = x.shape[1]
+        dpos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def dec_scan(carry, gp):
+            body = partial(self._group_body, positions=dpos, rules=rules,
+                           enc=enc_out)
+            return jax.checkpoint(body)(carry, gp), None
+
+        (x, aux), _ = jax.lax.scan(dec_scan, (x, aux), params["groups"])
+        return rms_norm(x, params["final_ln"]), aux
+
+    def _enc_body(self, carry, gp, positions, rules):
+        x, aux = carry
+        return _apply_block(gp["blk0"], x, aux, "bidir", "dense", positions,
+                            rules, self.cfg)
+
+    # ---------------------------------------------------------- loss
+    def logits(self, params, hidden, rules):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        lg = jax.lax.dot_general(hidden, w, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return constrain(lg, ("batch", "seq", "vocab"), rules)
+
+    def loss(self, params, batch, rules: Rules):
+        hidden, aux = self.forward(params, batch, rules)
+        lg = self.logits(params, hidden, rules)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int) -> tuple[dict, dict]:
+        """Decode cache pytree + logical axes (local attn = ring buffer)."""
+        cfg = self.cfg
+        cache, axes = {}, {}
+        g, ga = {}, {}
+        for i, (mixer, ffn) in enumerate(cfg.pattern):
+            c, a = self._block_cache(mixer, batch, max_len, cfg.n_groups)
+            if ffn == "cmix":
+                c["x_cm"], a["x_cm"] = (
+                    jnp.zeros((cfg.n_groups, batch, 1, cfg.d_model), jnp.bfloat16),
+                    ("layers", "batch", None, "embed"))
+            g[f"blk{i}"], ga[f"blk{i}"] = c, a
+        cache["groups"], axes["groups"] = g, ga
+        if cfg.n_tail:
+            t, ta = {}, {}
+            for i, (mixer, ffn) in enumerate(cfg.pattern[: cfg.n_tail]):
+                c, a = self._block_cache(mixer, batch, max_len, 1)
+                t[f"blk{i}"], ta[f"blk{i}"] = c, a
+            cache["tail"], axes["tail"] = t, ta
+        if cfg.n_enc_layers:  # cross-attention K/V, filled at prefill
+            Se = min(max_len, 4096)
+            K, dh = cfg.n_kv, cfg.hd
+            cache["cross"] = {
+                "k": jnp.zeros((cfg.n_groups, batch, Se, K, dh), jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_groups, batch, Se, K, dh), jnp.bfloat16)}
+            axes["cross"] = {
+                "k": ("layers", "batch", None, "kv_heads", None),
+                "v": ("layers", "batch", None, "kv_heads", None)}
+        return cache, axes
+
+    def _block_cache(self, mixer, batch, max_len, stack):
+        cfg = self.cfg
+        if mixer in ("global", "bidir"):
+            return attn.init_gqa_cache(cfg, batch, max_len, stack)
+        if mixer == "local":
+            c, a = attn.init_gqa_cache(cfg, batch, min(cfg.window, max_len), stack)
+            c["kpos"] = jnp.full((stack, batch, min(cfg.window, max_len)),
+                                 -1, jnp.int32)
+            a["kpos"] = ("layers", "batch", "kv_seq")
+            return c, a
+        if mixer == "mla":
+            return attn.init_mla_cache(cfg, batch, max_len, stack)
+        if mixer == "mamba":
+            return mam.init_mamba_state(cfg, batch, stack)
+        if mixer == "rwkv":
+            d = cfg.d_model
+            H, dh = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+            return ({"S": jnp.zeros((stack, batch, H, dh, dh), jnp.float32),
+                     "x_tm": jnp.zeros((stack, batch, 1, d), jnp.bfloat16)},
+                    {"S": ("layers", "batch", "heads", None, None),
+                     "x_tm": ("layers", "batch", None, "embed")})
+        raise KeyError(mixer)
+
+    def _decode_block(self, bp, bc, x, pos, mixer, ffn, rules, cross_kv=None):
+        cfg = self.cfg
+        h = rms_norm(x, bp["ln1"])
+        mp = bp["mixer"]
+        newc = dict(bc)
+        if mixer in ("global", "bidir"):
+            a, kv = attn.decode_gqa(mp, h, bc, pos, rules, cfg)
+            newc.update(kv)
+        elif mixer == "local":
+            a, kv = self._decode_local(mp, h, bc, pos, rules)
+            newc.update(kv)
+        elif mixer == "mla":
+            a, kv = attn.decode_mla(mp, h, bc, pos, rules, cfg)
+            newc.update(kv)
+        elif mixer == "mamba":
+            a, st = mam.decode_mamba(mp, h, bc, rules, cfg)
+            newc.update(st)
+        elif mixer == "rwkv":
+            a, S_new = rwk.decode_rwkv_tmix(mp, h, bc["S"], bc["x_tm"], rules, cfg)
+            newc["S"] = S_new
+            newc["x_tm"] = h.astype(jnp.bfloat16)
+        else:  # pragma: no cover
+            raise KeyError(mixer)
+        x = x + a
+        if cross_kv is not None:
+            hx = rms_norm(x, bp["ln_x"])
+            x = x + self._decode_cross(bp["cross"], hx, cross_kv, rules)
+        if ffn != "none":
+            h2 = rms_norm(x, bp["ln2"])
+            if ffn == "dense":
+                x = x + apply_ffn(bp["ffn"], h2, rules, self.cfg)
+            elif ffn == "moe":
+                y, _ = moe_mod.apply_moe(bp["ffn"], h2, rules, self.cfg)
+                x = x + y
+            elif ffn == "cmix":
+                x = x + rwk.apply_rwkv_cmix(bp["ffn"], h2, rules, self.cfg,
+                                            x_last=bc["x_cm"])
+                newc["x_cm"] = h2.astype(jnp.bfloat16)
+        return x, newc
+
+    def _decode_local(self, mp, h, bc, pos, rules):
+        """Ring-buffer sliding-window decode: slot = pos % window."""
+        cfg = self.cfg
+        B = h.shape[0]
+        W = bc["k"].shape[1]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k1, v1 = attn._qkv(mp, h, positions, cfg)  # noqa: SLF001
+        slot = pos % W
+        ck = jax.lax.dynamic_update_slice(bc["k"], k1.astype(bc["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(bc["v"], v1.astype(bc["v"].dtype),
+                                          (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(
+            bc["kpos"], jnp.full((B, 1), pos, jnp.int32), (0, slot))
+        valid = (kpos <= pos) & (kpos > pos - cfg.window) & (kpos >= 0)
+        H, K, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+        G = H // K
+        qg = q.reshape(B, K, G, dh)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                       preferred_element_type=jnp.float32) / (dh ** 0.5)
+        s = jnp.where(valid[:, None, None], s, attn.NEG_INF)
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - mx)
+        num = jnp.einsum("bkgs,bskd->bkgd", e, cv.astype(jnp.float32))
+        o = (num / jnp.sum(e, -1, keepdims=True)).astype(h.dtype)
+        y = dense(o.reshape(B, 1, H * dh), mp["wo"])
+        return y, {"k": ck, "v": cv, "kpos": kpos}
+
+    def _decode_cross(self, cp, hx, cross_kv, rules):
+        cfg = self.cfg
+        B = hx.shape[0]
+        H, K, dh = cfg.n_heads, cfg.n_kv, cfg.hd
+        q = dense(hx, cp["wq"]).reshape(B, K, H // K, dh)
+        s = jnp.einsum("bkgd,bskd->bkgs", q, cross_kv["k"],
+                       preferred_element_type=jnp.float32) / (dh ** 0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", w, cross_kv["v"].astype(jnp.float32))
+        return dense(o.astype(hx.dtype).reshape(B, 1, H * dh), cp["wo"])
+
+    def decode_step(self, params, cache, token, pos, rules: Rules,
+                    enc_out=None):
+        """One-token decode → (logits [B, V], new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token[:, None], axis=0) * (cfg.d_model ** 0.5)
+        x = constrain(x.astype(jnp.bfloat16), ("batch", None, "embed"), rules)
+
+        def scan_f(carry, gpc):
+            x, = carry
+            gp, gc = gpc
+            newc = {}
+            cross = gc.get("cross")
+            for i, (mixer, ffn) in enumerate(cfg.pattern):
+                x, nc = self._decode_block(gp[f"blk{i}"], gc[f"blk{i}"], x,
+                                           pos, mixer, ffn, rules,
+                                           cross_kv=cross)
+                newc[f"blk{i}"] = nc
+            return (x,), newc
+
+        if cfg.n_enc_layers:  # per-group cross KV rides along the scan
+            xs = (params["groups"], {**cache["groups"], "cross": cache["cross"]})
+        else:
+            xs = (params["groups"], cache["groups"])
+        (x,), new_groups = jax.lax.scan(scan_f, (x,), xs)
+        new_cache = dict(cache)
+        new_cache["groups"] = new_groups
+        if cfg.n_tail:
+            tp = jax.tree.map(lambda a: a[0], params["tail"])
+            tc = cache["tail"]
+            newt = {}
+            for i, (mixer, ffn) in enumerate(cfg.pattern[: cfg.n_tail]):
+                bc = jax.tree.map(lambda a: a[0], tc[f"blk{i}"])
+                x, nc = self._decode_block(tp[f"blk{i}"], bc, x, pos, mixer,
+                                           ffn, rules)
+                newt[f"blk{i}"] = jax.tree.map(lambda a: a[None], nc)
+            new_cache["tail"] = newt
+        x = rms_norm(x, params["final_ln"])
+        lg = self.logits(params, x, rules)[:, 0]
+        return lg, new_cache
+
+    # ----------------------------------------------------- serve utils
+    def prefill_logits(self, params, batch, rules: Rules):
+        """Dry-run prefill: forward pass → last-position logits [B, V]."""
+        hidden, _ = self.forward(params, batch, rules)
+        return self.logits(params, hidden[:, -1:], rules)[:, 0]
+
+    def prefill_via_decode(self, params, cache, tokens, rules: Rules,
+                           enc_out=None):
+        """Token-by-token prefill (test/serving-scale; production fuses)."""
+        S = tokens.shape[1]
+
+        def body(cache, i):
+            lg, cache = self.decode_step(params, cache, tokens[:, i], i,
+                                         rules, enc_out=enc_out)
+            return cache, lg
+
+        cache, lgs = jax.lax.scan(body, cache, jnp.arange(S))
+        return lgs[-1], cache
+
+    def encode(self, params, frame_embeds, rules: Rules):
+        """Encoder stack → enc_out [B, Se, d] (seamless)."""
+        x = constrain(frame_embeds.astype(jnp.bfloat16),
+                      ("batch", "seq", "embed"), rules)
+        B, Se, _ = x.shape
+        epos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+
+        def enc_scan(carry, gp):
+            body = partial(self._enc_body, positions=epos, rules=rules)
+            return body(carry, gp), None
+
+        (x, _), _ = jax.lax.scan(enc_scan, (x, jnp.float32(0.0)),
+                                 params["enc_groups"])
+        return rms_norm(x, params["enc_ln"])
+
+    def build_cross_cache(self, params, enc_out):
+        """Precompute decoder cross K/V from encoder output (stacked [G])."""
+        cfg = self.cfg
+        B, Se, _ = enc_out.shape
+        K, dh = cfg.n_kv, cfg.hd
+        cp = params["groups"]["blk0"]["cross"]
+        k = jnp.einsum("bsd,gdk->gbsk", enc_out, cp["wk"]).reshape(
+            cfg.n_groups, B, Se, K, dh)
+        v = jnp.einsum("bsd,gdk->gbsk", enc_out, cp["wv"]).reshape(
+            cfg.n_groups, B, Se, K, dh)
+        return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}

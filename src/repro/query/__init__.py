@@ -1,0 +1,11 @@
+"""Distributed query engine: workers → (switch) pruning → master.
+
+Reproduces the paper's rack-scale deployment: data is partitioned across
+workers (mesh axis "data"); each shard streams through the pruning
+algorithm at the point where it would cross the network; the master
+completes the query on survivors. `protocol` models the §7.2 reliability
+protocol and its superset-safety property.
+"""
+from .tables import Table, make_products_ratings, make_uservisits, make_rankings
+from .engine import run_query, QuerySpec
+from .protocol import SwitchReliability, simulate_lossy_stream

@@ -1,0 +1,82 @@
+"""Reliability protocol (paper §7.2) — discrete-event simulation.
+
+UDP-like channel: workers send entries with sequence numbers; the switch
+keeps, per flow, the last processed SEQ X and participates in loss
+recovery:
+
+  Y == X+1 : process (prune → ACK to worker; forward → master ACKs)
+  Y <= X   : retransmission of an already-processed packet → forward
+             WITHOUT re-processing (no double state update)
+  Y >  X+1 : a gap — drop and wait for X+1's retransmission
+
+The key correctness property (tested with hypothesis): even when pruned
+packets' ACKs are lost and their retransmissions reach the master, the
+query result is unchanged — every Cheetah algorithm tolerates supersets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SwitchReliability:
+    """Per-flow switch-side protocol state machine."""
+    last_seq: int = -1
+
+    def on_packet(self, seq: int, prune_fn) -> tuple[str, bool]:
+        """Returns (action, processed). action ∈ ack_prune|forward|drop."""
+        if seq == self.last_seq + 1:
+            self.last_seq = seq
+            pruned = prune_fn(seq)
+            return ("ack_prune" if pruned else "forward"), True
+        if seq <= self.last_seq:
+            # already processed once: forward without touching state
+            return "forward", False
+        return "drop", False
+
+
+def simulate_lossy_stream(values, prune_keep_mask, drop_prob: float,
+                          seed: int = 0, max_rounds: int = 64) -> dict:
+    """Workers retransmit un-ACKed packets; switch runs the §7.2 protocol.
+
+    `prune_keep_mask[i]` is the (deterministic) switch decision for entry
+    i the first time it is processed. Packets and ACKs are dropped i.i.d.
+    with `drop_prob`. Returns master-received indices and stats.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    m = len(values)
+    sw = SwitchReliability()
+    acked = [False] * m
+    master_got: list[int] = []
+    rounds = 0
+    processed_decision = {}
+    while not all(acked) and rounds < max_rounds:
+        rounds += 1
+        for seq in range(m):
+            if acked[seq]:
+                continue
+            if rng.random() < drop_prob:      # worker → switch loss
+                continue
+            action, processed = sw.on_packet(
+                seq, lambda s: not bool(prune_keep_mask[s]))
+            if processed:
+                processed_decision[seq] = action
+            if action == "ack_prune":
+                if rng.random() >= drop_prob:  # switch → worker ACK loss
+                    acked[seq] = True
+            elif action == "forward":
+                if rng.random() < drop_prob:   # switch → master loss
+                    continue
+                master_got.append(seq)
+                if rng.random() >= drop_prob:  # master → worker ACK loss
+                    acked[seq] = True
+            # drop: wait for retransmission of the gap head
+    return {
+        "master_indices": sorted(set(master_got)),
+        "delivered_all": all(acked),
+        "rounds": rounds,
+        "double_processed": False,  # by construction: processed once per seq
+        "decisions": processed_decision,
+    }

@@ -1,0 +1,82 @@
+"""Columnar tables + benchmark-like data generators.
+
+Mirrors the paper's evaluation data: the running Products/Ratings example
+(Table 1), and BigData-benchmark-like `uservisits` / `rankings` tables
+(§8.1). Columns are flat jnp arrays; string-ish columns are dictionary
+encoded to uint32 ids (the CWorker's fingerprint/serialize step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Table:
+    name: str
+    cols: dict  # str -> jnp.ndarray [m]
+
+    @property
+    def num_rows(self) -> int:
+        return int(next(iter(self.cols.values())).shape[0])
+
+    def shard(self, num: int) -> list["Table"]:
+        """Partition rows round-robin into `num` worker shards (equal size)."""
+        m = self.num_rows
+        per = m // num
+        out = []
+        for i in range(num):
+            out.append(Table(f"{self.name}[{i}]",
+                             {k: v[i * per:(i + 1) * per] for k, v in self.cols.items()}))
+        return out
+
+    def stacked_shards(self, num: int) -> dict:
+        """cols reshaped to [num, m//num] — the shard_map input layout."""
+        m = self.num_rows
+        per = m // num
+        return {k: v[:num * per].reshape(num, per) for k, v in self.cols.items()}
+
+
+def make_products_ratings() -> tuple[Table, Table]:
+    """The paper's Table 1 running example (dictionary-encoded)."""
+    # name ids: Burger=1 Pizza=2 Fries=3 Jello=4 Cheetos=5
+    # seller ids: McCheetah=1 Papizza=2 JellyFish=3
+    products = Table("products", {
+        "name": jnp.asarray([1, 2, 3, 4], jnp.uint32),
+        "seller": jnp.asarray([1, 2, 1, 3], jnp.uint32),
+        "price": jnp.asarray([4, 7, 2, 5], jnp.int32),
+    })
+    ratings = Table("ratings", {
+        "name": jnp.asarray([2, 5, 4, 1, 3], jnp.uint32),
+        "taste": jnp.asarray([7, 8, 9, 5, 3], jnp.int32),
+        "texture": jnp.asarray([5, 6, 4, 7, 3], jnp.int32),
+    })
+    return products, ratings
+
+
+def make_uservisits(m: int, seed: int = 0, num_ips: int | None = None,
+                    num_langs: int = 64) -> Table:
+    """BigData-like uservisits: sourceIP, destURL, adRevenue, lang, ..."""
+    rng = np.random.default_rng(seed)
+    num_ips = num_ips or max(m // 10, 16)
+    # zipf-ish IP popularity (heavy hitters for DISTINCT / GROUP BY)
+    ranks = rng.zipf(1.3, m).astype(np.int64) % num_ips
+    return Table("uservisits", {
+        "source_ip": jnp.asarray(ranks.astype(np.uint32)),
+        "dest_url": jnp.asarray(rng.integers(0, max(m // 5, 8), m).astype(np.uint32)),
+        "ad_revenue": jnp.asarray(rng.gamma(2.0, 50.0, m).astype(np.float32) + 1.0),
+        "lang": jnp.asarray(rng.integers(0, num_langs, m).astype(np.uint32)),
+        "duration": jnp.asarray(rng.integers(1, 1000, m).astype(np.int32)),
+    })
+
+
+def make_rankings(m: int, seed: int = 1) -> Table:
+    """BigData-like rankings: pageURL, pageRank, avgDuration."""
+    rng = np.random.default_rng(seed)
+    return Table("rankings", {
+        "page_url": jnp.asarray(rng.permutation(m).astype(np.uint32)),
+        "page_rank": jnp.asarray((rng.pareto(1.5, m) * 10 + 1).astype(np.float32)),
+        "avg_duration": jnp.asarray(rng.integers(1, 500, m).astype(np.int32)),
+    })

@@ -1,0 +1,2 @@
+"""Serving: batched decode, Cheetah logit TOP-N pruning, request dedup."""
+from .engine import ServeEngine, pruned_topk, RequestCache

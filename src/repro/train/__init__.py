@@ -1,0 +1,6 @@
+"""Distributed training runtime: optimizer, microbatched step, checkpoint,
+gradient compression (Cheetah TOP-N + error feedback), fault tolerance."""
+from .optimizer import AdamWConfig, init_opt_state, apply_updates
+from .train_loop import make_train_step, init_state, state_axes
+from .grad_compress import CompressConfig, compress_grads, init_error_feedback
+from . import checkpoint, elastic

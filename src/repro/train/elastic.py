@@ -1,0 +1,109 @@
+"""Fault tolerance at pod scale: re-mesh planning + straggler policy.
+
+No real multi-host runtime exists in this container; what IS testable —
+and what an operator actually configures — is the decision logic:
+
+* `remesh_plan`: given the current mesh and a set of failed hosts,
+  compute the largest healthy (data × model) mesh that preserves the
+  model axis (TP groups must stay intact; DP shrinks), which checkpoint
+  shards remain valid, and the per-arch re-sharding moves.
+* `StragglerPolicy`: deadline-based step skipping with gradient
+  re-weighting (skip-and-accumulate), the standard mitigation when a
+  host is slow but not dead.
+
+The training driver consults these on failure signals and restarts from
+the last verified checkpoint (train/checkpoint.py) with the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTopology:
+    hosts: int
+    chips_per_host: int = 4
+
+    @property
+    def chips(self) -> int:
+        return self.hosts * self.chips_per_host
+
+
+@dataclasses.dataclass
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axes: tuple
+    dropped_chips: int
+    batch_scale: float          # global batch shrinks by this factor OR
+    accum_scale: int            # grad-accum grows by this to keep batch
+    reshard: str                # description of the data movement
+    feasible: bool
+    reason: str = ""
+
+
+def remesh_plan(mesh_shape: tuple, axes: tuple, failed_hosts: set,
+                topo: HostTopology, keep_global_batch: bool = True) -> RemeshPlan:
+    """Shrink the data axis to the largest multiple that fits healthy chips.
+
+    The model axis is preserved (parameters keep their TP sharding, so
+    only DP-replica membership changes — re-sharding is a reshuffle of
+    batch shards plus an optimizer-state re-partition along "data").
+    """
+    chips_total = 1
+    for s in mesh_shape:
+        chips_total *= s
+    healthy = topo.chips - len(failed_hosts) * topo.chips_per_host
+    model = mesh_shape[-1]
+    lead = mesh_shape[:-2]  # e.g. ("pod",)
+    lead_n = 1
+    for s in lead:
+        lead_n *= s
+    if healthy < model:
+        return RemeshPlan(mesh_shape, (), axes, chips_total - healthy, 0, 0,
+                          "", False, "fewer healthy chips than the model axis")
+    new_data = (healthy // (model * lead_n))
+    if new_data == 0:
+        lead_n, lead = 1, ()  # drop the pod axis, fold into one pod
+        new_data = healthy // model
+    new_shape = lead + (new_data, model)
+    new_chips = lead_n * new_data * model
+    scale = new_chips / chips_total
+    return RemeshPlan(
+        old_shape=mesh_shape, new_shape=new_shape, axes=axes[-len(new_shape):],
+        dropped_chips=chips_total - new_chips,
+        batch_scale=1.0 if keep_global_batch else scale,
+        accum_scale=max(1, math.ceil(1.0 / scale)) if keep_global_batch else 1,
+        reshard=("params/opt-state re-partition along 'data' "
+                 f"({mesh_shape} -> {new_shape}); TP groups intact; "
+                 "batch shards reassigned round-robin"),
+        feasible=True)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based skip-and-reweight (async-ish SGD under stragglers).
+
+    A worker missing `deadline_ms` contributes nothing this step; the
+    aggregated gradient is re-scaled by arrived/expected so the update is
+    unbiased in expectation; a worker late `evict_after` consecutive
+    steps is reported to the remesh planner.
+    """
+    deadline_ms: float = 500.0
+    evict_after: int = 10
+    _late_counts: dict = dataclasses.field(default_factory=dict)
+
+    def step(self, arrival_ms: dict) -> dict:
+        arrived = {w for w, t in arrival_ms.items() if t <= self.deadline_ms}
+        for w in arrival_ms:
+            if w in arrived:
+                self._late_counts[w] = 0
+            else:
+                self._late_counts[w] = self._late_counts.get(w, 0) + 1
+        evict = {w for w, c in self._late_counts.items()
+                 if c >= self.evict_after}
+        n = len(arrival_ms)
+        return {"contributors": sorted(arrived),
+                "grad_scale": n / max(len(arrived), 1),
+                "evict": sorted(evict)}

@@ -1,0 +1,87 @@
+"""Training step factory: microbatched grad accumulation, remat, AdamW.
+
+make_train_step returns a pure (params, opt_state, batch) → (params,
+opt_state, metrics) function suitable for jax.jit with shardings (the
+dry-run lowers exactly this). Microbatching runs as a lax.scan so one
+gradient buffer exists regardless of accumulation depth; the model's
+per-group jax.checkpoint gives full activation remat inside each
+microbatch.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Rules
+from . import grad_compress as gc
+from . import optimizer as opt
+
+
+def make_train_step(lm, rules: Rules, opt_cfg: opt.AdamWConfig,
+                    microbatches: int = 1, compress: gc.CompressConfig | None = None):
+    """lm: repro.models.LM. batch leaves have leading dim B_global."""
+
+    def loss_fn(params, mb):
+        loss, metrics = lm.loss(params, mb, rules)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+        mbs = jax.tree.map(
+            lambda x: x.reshape(microbatches, B // microbatches, *x.shape[1:]),
+            batch)
+
+        zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                               acc, grads)
+            return (acc, loss_acc + loss / microbatches), None
+
+        if microbatches > 1:
+            (grads, loss), _ = jax.lax.scan(micro, (zero_grads, jnp.float32(0)),
+                                            mbs)
+        else:
+            mb = jax.tree.map(lambda x: x[0], mbs)
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        stats = {}
+        if compress is not None:
+            grads, new_ef, cstats = gc.compress_grads(
+                grads, opt_state["ef"], compress)
+            stats.update(cstats)
+        params, new_opt, ostats = opt.apply_updates(
+            params, grads, {k: v for k, v in opt_state.items() if k != "ef"},
+            opt_cfg)
+        if compress is not None:
+            new_opt["ef"] = new_ef
+        stats.update(ostats)
+        stats["loss"] = loss
+        return params, new_opt, stats
+
+    return train_step
+
+
+def init_state(lm, params, opt_cfg: opt.AdamWConfig,
+               compress: gc.CompressConfig | None = None) -> dict:
+    state = opt.init_opt_state(params, opt_cfg)
+    if compress is not None:
+        state["ef"] = gc.init_error_feedback(params)
+    return state
+
+
+def state_axes(param_axes, opt_cfg: opt.AdamWConfig,
+               compress: gc.CompressConfig | None = None) -> dict:
+    axes = opt.opt_state_axes(param_axes, opt_cfg)
+    if compress is not None:
+        axes["ef"] = param_axes
+    return axes

@@ -1,0 +1,84 @@
+"""The cost-measurement substrate (launch/hloanalysis) — the §Roofline
+numbers are only as good as these walkers."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hloanalysis import (_split_computations, hlo_collectives,
+                                      jaxpr_flops)
+
+
+def test_jaxpr_flops_dot():
+    f = lambda a, b: a @ b
+    x = jnp.zeros((64, 128))
+    y = jnp.zeros((128, 32))
+    assert jaxpr_flops(f, x, y) == 2 * 64 * 128 * 32
+
+
+def test_jaxpr_flops_scan_trip_count():
+    """The raison d'être: XLA cost_analysis counts loop bodies once."""
+    def f(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)[0]
+    x = jnp.zeros((128, 128))
+    assert jaxpr_flops(f, x) == 10 * 2 * 128 ** 3
+    # cross-check the undercount we corrected for
+    hlo_flops = jax.jit(f).lower(x).compile().cost_analysis()["flops"]
+    assert hlo_flops < jaxpr_flops(f, x) / 5
+
+
+def test_jaxpr_flops_remat_included():
+    def loss(w, x):
+        h = jax.checkpoint(lambda w, x: jnp.tanh(x @ w))(w, x)
+        return jnp.sum(h @ w)
+    w = jnp.zeros((64, 64))
+    x = jnp.zeros((8, 64))
+    fwd = jaxpr_flops(loss, w, x)
+    bwd = jaxpr_flops(jax.grad(loss), w, x)
+    assert bwd > 2 * fwd  # backward + rematerialized forward
+
+
+def test_jaxpr_flops_batched_dot():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+    a = jnp.zeros((4, 16, 32))
+    b = jnp.zeros((4, 32, 8))
+    assert jaxpr_flops(f, a, b) == 2 * 4 * 16 * 32 * 8
+
+
+_SYNTH_HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%loop_body (arg: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ag = f32[128]{0} all-gather(%p0), channel_id=1, dimensions={0}
+  %ar = f32[64]{0} all-reduce(%p1), channel_id=2, to_apply=%add
+}
+
+%loop_cond (arg: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(7)
+}
+
+ENTRY %main (p: f32[128]) -> f32[] {
+  %w = (s32[], f32[128]) while(%t), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"7"}}
+  %ag2 = f32[256]{0} all-gather(%q), channel_id=3, dimensions={0}
+}
+"""
+
+
+def test_hlo_collectives_trip_weighting():
+    comps = _split_computations(_SYNTH_HLO)
+    assert "loop_body" in comps and "main" in comps
+    out = hlo_collectives(_SYNTH_HLO)
+    # body: 128·4 gather + 64·4 reduce, ×7 trips; entry: 256·4 gather
+    assert out["bytes"]["all-gather"] == 7 * 128 * 4 + 256 * 4
+    assert out["bytes"]["all-reduce"] == 7 * 64 * 4
+    assert out["counts"]["all-gather"] == 8
+
+
+def test_hlo_collectives_real_program():
+    """End-to-end on a real partitioned program (1-device degenerate)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    f = lambda x: jnp.sum(x * 2)
+    with mesh:
+        hlo = jax.jit(f, in_shardings=NamedSharding(mesh, P("data"))) \
+            .lower(jax.ShapeDtypeStruct((64,), jnp.float32)).compile().as_text()
+    out = hlo_collectives(hlo)
+    assert out["total_bytes"] == 0  # single device: no collectives

@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: exact equality across shape/dtype
+sweeps (interpret mode executes kernel bodies on CPU) + property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import opt_keep_distinct, skyline_oracle
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("d,w,block,m", [
+    (64, 2, 128, 1024), (256, 4, 256, 2048), (1024, 8, 512, 2048),
+    (37, 3, 128, 640),  # non-power-of-two d
+])
+def test_distinct_kernel_matches_ref(rng, d, w, block, m):
+    vals = jnp.asarray(rng.integers(1, 500, m).astype(np.uint32))
+    k = ops.distinct_prune(vals, d=d, w=w, block=block)
+    r = ops.distinct_prune(vals, d=d, w=w, block=block, use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_distinct_kernel_no_false_positive(rng):
+    vals = jnp.asarray(rng.integers(1, 200, 4096).astype(np.uint32))
+    keep = ops.distinct_prune(vals, d=128, w=4, block=256)
+    assert bool(jnp.all(keep | ~opt_keep_distinct(vals)))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("d,w,block", [(128, 4, 128), (512, 8, 256)])
+def test_topn_kernel_matches_ref(rng, d, w, block, dtype):
+    v = jnp.asarray(rng.permutation(4096).astype(dtype))
+    k = ops.topn_prune(v, d=d, w=w, block=block)
+    r = ops.topn_prune(v, d=d, w=w, block=block, use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_topn_kernel_keeps_prefix_topn(rng):
+    """Anything in the true running top-N must be forwarded (N <= d·w)."""
+    v = jnp.asarray(rng.permutation(2048).astype(np.float32))
+    keep = np.asarray(ops.topn_prune(v, d=64, w=4, block=128))
+    vv = np.asarray(v)
+    N = 32
+    import heapq
+    heap = []
+    for i, x in enumerate(vv.tolist()):
+        if len(heap) < N:
+            heapq.heappush(heap, x)
+            assert keep[i], f"pruned warm-up top-N entry at {i}"
+        elif x > heap[0]:
+            heapq.heapreplace(heap, x)
+            assert keep[i], f"pruned a running top-{N} entry at {i}"
+
+
+@pytest.mark.parametrize("rows,width,block", [(2, 128, 128), (4, 512, 256)])
+def test_cms_kernel_matches_ref(rng, rows, width, block):
+    keys = jnp.asarray(rng.integers(0, 77, 2048).astype(np.uint32))
+    wts = jnp.asarray(rng.integers(1, 6, 2048).astype(np.float32))
+    kt = ops.cms_build(keys, wts, rows=rows, width=width, block=block)
+    rt = ops.cms_build(keys, wts, rows=rows, width=width, block=block,
+                       use_ref=True)
+    np.testing.assert_allclose(np.asarray(kt), np.asarray(rt))
+    ke = ops.cms_query(kt, keys, block=block)
+    re_ = ops.cms_query(rt, keys, block=block, use_ref=True)
+    np.testing.assert_allclose(np.asarray(ke), np.asarray(re_))
+
+
+def test_cms_one_sided(rng):
+    keys = jnp.asarray(rng.integers(0, 50, 2048).astype(np.uint32))
+    wts = jnp.asarray(rng.integers(1, 5, 2048).astype(np.float32))
+    t = ops.cms_build(keys, wts, rows=3, width=128)
+    est = np.asarray(ops.cms_query(t, keys))
+    true = {}
+    for k, w in zip(np.asarray(keys).tolist(), np.asarray(wts).tolist()):
+        true[k] = true.get(k, 0) + w
+    for i, k in enumerate(np.asarray(keys).tolist()):
+        assert est[i] >= true[k] - 1e-3
+
+
+@pytest.mark.parametrize("nbits,H,block", [(1024, 2, 128), (8192, 4, 256)])
+def test_bloom_kernel_matches_ref(rng, nbits, H, block):
+    keys = jnp.asarray(rng.integers(0, 4000, 1024).astype(np.uint32))
+    kb = ops.bloom_build(keys, nbits=nbits, num_hashes=H, block=block)
+    rb = ops.bloom_build(keys, nbits=nbits, num_hashes=H, block=block,
+                         use_ref=True)
+    np.testing.assert_allclose(np.asarray(kb), np.asarray(rb))
+    q = ops.bloom_query(kb, keys, num_hashes=H, block=block)
+    assert bool(jnp.all(q)), "bloom must have no false negatives"
+
+
+@pytest.mark.parametrize("w,D,score", [(4, 2, "aph"), (8, 3, "sum"),
+                                       (16, 2, "aph")])
+def test_skyline_kernel_matches_ref(rng, w, D, score):
+    pts = jnp.asarray(rng.integers(1, 999, (1024, D)).astype(np.float32))
+    k = ops.skyline_prune(pts, w=w, block=128, score=score)
+    r = ops.skyline_prune(pts, w=w, block=128, score=score, use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_skyline_kernel_never_prunes_skyline(rng):
+    pts = jnp.asarray(rng.integers(1, 500, (1024, 2)).astype(np.float32))
+    keep = ops.skyline_prune(pts, w=8, block=128)
+    assert bool(jnp.all(keep | ~skyline_oracle(pts)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 30), st.integers(64, 200))
+def test_distinct_kernel_property(distinct_vals, m):
+    """Kernel == ref for arbitrary duplication structure."""
+    rs = np.random.default_rng(distinct_vals * 7 + m)
+    base = rs.integers(1, 1 << 20, distinct_vals).astype(np.uint32)
+    vals = jnp.asarray(base[rs.integers(0, distinct_vals, m)])
+    k = ops.distinct_prune(vals, d=16, w=2, block=32)
+    r = ops.distinct_prune(vals, d=16, w=2, block=32, use_ref=True)
+    assert bool(jnp.all(k == r))

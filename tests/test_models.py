@@ -1,0 +1,119 @@
+"""Per-arch smoke tests (reduced configs): forward/backward shapes, no
+NaNs, and decode-vs-forward consistency (cache-path correctness)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get, get_smoke, input_specs, SHAPES
+from repro.models import LM
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))}
+    if cfg.frontend == "vision":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.frontend_len, cfg.d_model))
+        ).astype(jnp.bfloat16)
+    if cfg.frontend == "audio":
+        b["frame_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, S, cfg.d_model))).astype(jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_backward(arch):
+    cfg = get_smoke(arch)
+    lm = LM(cfg)
+    params, axes = lm.init(jax.random.key(0))
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss(p, batch, None), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+    hidden, _ = lm.forward(params, batch, None)
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma3-1b", "rwkv6-7b",
+                                  "jamba-1.5-large-398b",
+                                  "deepseek-v3-671b",
+                                  "seamless-m4t-large-v2"])
+def test_decode_matches_forward(arch):
+    """Last-token logits from the cache path == full forward (bf16 tol).
+
+    Covers: GQA cache, local ring buffer, RWKV state, Mamba state, MLA
+    absorbed decode, enc-dec cross cache.
+    """
+    cfg = get_smoke(arch)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(1))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S, seed=1)
+    rules = None
+    hidden, _ = lm.forward(params, batch, rules)
+    full_logits = lm.logits(params, hidden, rules)[:, -1]
+
+    cache, _ = lm.init_cache(B, S + 4)
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = lm.encode(params, batch["frame_embeds"], rules)
+        cache["cross"] = lm.build_cross_cache(params, enc_out)
+    last, cache = lm.prefill_via_decode(params, cache, batch["tokens"], rules)
+    err = float(jnp.max(jnp.abs(last - full_logits)))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    # jamba: discrete MoE routing amplifies bf16 noise across 8 hybrid
+    # layers (isolated mamba decode matches the chunked scan EXACTLY —
+    # rel err 0.0 — and moe parity is covered by test_moe_a2a)
+    tol = 0.12 if arch.startswith("jamba") else 0.08
+    assert err / scale < tol, f"{arch}: decode/forward mismatch {err/scale}"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_input_specs_complete(arch):
+    cfg = get(arch)
+    for shape in SHAPES:
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs or "token" in specs
+        for v in specs.values():
+            assert all(d > 0 for d in v.shape)
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts vs the advertised sizes.
+
+    moonshot: the assigned config (48L × 64e × d_ff 1408) implies ~29B
+    total; the "16b-a3b" name tracks the HF release's layer count — we
+    follow the assigned table and verify ACTIVE ≈ 3B instead (the a3b).
+    """
+    expect = {"pixtral-12b": 12e9, "nemotron-4-15b": 15e9, "gemma3-4b": 4e9,
+              "gemma3-1b": 1e9, "qwen3-1.7b": 1.7e9, "rwkv6-7b": 7e9,
+              "moonshot-v1-16b-a3b": 29e9, "deepseek-v3-671b": 671e9,
+              "jamba-1.5-large-398b": 398e9, "seamless-m4t-large-v2": 2.3e9}
+    for arch, want in expect.items():
+        got = get(arch).param_count()
+        assert 0.5 * want < got < 1.6 * want, (arch, got, want)
+    active = get("moonshot-v1-16b-a3b").active_param_count()
+    assert 2e9 < active < 5e9, active  # the "A3B"
+    assert 3e10 < get("deepseek-v3-671b").active_param_count() < 4.5e10
+
+
+def test_moe_routing_mass_conservation():
+    """Every non-dropped token's outputs are weighted by normalized probs."""
+    from repro.models import moe as moe_mod
+    from repro.models.common import ParamCollector
+    cfg = get_smoke("moonshot-v1-16b-a3b")
+    col = ParamCollector(key=jax.random.key(0))
+    moe_mod.init_moe(col, cfg, 1)
+    p = jax.tree.map(lambda a: a[0], col.params)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 8, cfg.d_model))
+                    ).astype(jnp.bfloat16)
+    y, aux = moe_mod.apply_moe(p, x, None, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))

@@ -1,0 +1,72 @@
+"""Query planner: Table 2 resource model + §6 multi-query packing."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ResourceFootprint, SwitchProfile, footprint,
+                        pack_queries, rule_count)
+
+
+def test_table2_formulas():
+    A = SwitchProfile().alus_per_stage
+    fp = footprint("distinct_fifo", d=4096, w=2)
+    assert fp == ResourceFootprint(math.ceil(2 / A), 2, 4096 * 2 * 8)
+    fp = footprint("distinct_lru", d=4096, w=2)
+    assert fp.stages == 2 and fp.sram_bytes == 4096 * 2 * 8
+    fp = footprint("skyline_sum", D=2, w=10)
+    assert fp.stages == 1 + 20 and fp.alus == 2 * 1 - 1 + 10 * 3
+    fp = footprint("skyline_aph", D=2, w=10)
+    assert fp.tcam == 128 and fp.sram_bytes == 10 * 3 * 8 + (1 << 16) * 4
+    fp = footprint("topn_det", w=4)
+    assert fp.stages == 5 and fp.sram_bytes == 5 * 8
+    fp = footprint("join_bf", M=4 << 20, H=3)
+    assert fp.stages == 2 and fp.sram_bytes == 4 << 20
+    fp = footprint("having", d=3, w=1024)
+    assert fp.alus == 3 and fp.sram_bytes == 3 * 1024 * 8
+
+
+def test_rules_per_query_in_paper_range():
+    for algo in ("distinct_lru", "topn_det", "join_bf", "having",
+                 "skyline_aph", "groupby", "filter"):
+        assert 10 <= rule_count(algo) <= 20
+
+
+def test_packing_bigdata_workload():
+    prof = SwitchProfile(stages=32, alus_per_stage=16,
+                        sram_per_stage_bytes=6 << 20)
+    plan = pack_queries({
+        "filter": footprint("filter", num_predicates=2),
+        "groupby": footprint("groupby", d=4096, w=8),
+        "distinct": footprint("distinct_lru", d=4096, w=2),
+        "join": footprint("join_bf", M=4 << 20, H=3),
+    }, prof)
+    assert plan.feasible and plan.stages_used <= prof.stages
+
+
+def test_packing_infeasible_reported():
+    prof = SwitchProfile(stages=4, alus_per_stage=2,
+                         sram_per_stage_bytes=1 << 10)
+    plan = pack_queries({"skyline": footprint("skyline_aph", D=2, w=10)},
+                        prof)
+    assert not plan.feasible and "skyline" in plan.reason
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 64), st.integers(1, 16))
+def test_packing_never_oversubscribes(stages, alus):
+    prof = SwitchProfile(stages=stages, alus_per_stage=alus,
+                         sram_per_stage_bytes=1 << 20)
+    plan = pack_queries({
+        "a": footprint("topn_det", w=4),
+        "b": footprint("distinct_lru", d=512, w=2),
+        "c": footprint("filter", num_predicates=2),
+    }, prof)
+    if plan.feasible:
+        # re-play placements and check per-stage budgets
+        alu_used = [0] * prof.stages
+        for name, (s0, fp) in plan.placements.items():
+            per = math.ceil(fp.alus / max(fp.stages, 1))
+            for s in range(s0, s0 + fp.stages):
+                alu_used[s] += per
+        assert all(u <= prof.alus_per_stage for u in alu_used)

@@ -1,0 +1,38 @@
+"""Reliability protocol (§7.2): all packets delivered-or-pruned; duplicate
+deliveries of pruned packets never change query output (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.query import SwitchReliability, simulate_lossy_stream
+
+
+def test_in_order_processing():
+    sw = SwitchReliability()
+    actions = [sw.on_packet(i, lambda s: s % 2 == 0) for i in range(6)]
+    assert [a for a, _ in actions] == ["ack_prune", "forward"] * 3
+    # gap: packet 8 before 6/7 → dropped
+    assert sw.on_packet(8, lambda s: False) == ("drop", False)
+    # retransmission of an already-processed packet forwards w/o processing
+    assert sw.on_packet(3, lambda s: True) == ("forward", False)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.floats(0.0, 0.35), st.integers(0, 100))
+def test_lossy_delivery_completeness(drop, seed):
+    m = 60
+    rs = np.random.default_rng(seed)
+    vals = rs.integers(0, 10, m).astype(np.uint32)
+    keep = np.asarray(core.distinct_prune(jnp.asarray(vals), d=8, w=2).keep)
+    sim = simulate_lossy_stream(vals.tolist(), keep, drop_prob=drop,
+                                seed=seed, max_rounds=5000)
+    assert sim["delivered_all"]
+    got = set(sim["master_indices"])
+    must = set(np.nonzero(keep)[0].tolist())
+    assert must <= got  # every forwarded packet reaches the master
+    # superset safety: retransmitted pruned packets don't change DISTINCT
+    mask = np.zeros(m, bool)
+    mask[list(got)] = True
+    out = core.master_complete_distinct(jnp.asarray(vals), jnp.asarray(mask))
+    assert set(vals[np.asarray(out)].tolist()) == set(vals.tolist())

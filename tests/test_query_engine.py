@@ -1,0 +1,110 @@
+"""Distributed query engine: pruned results == direct query results.
+
+Multi-worker correctness runs in a subprocess with 8 host devices so the
+main test process keeps its single-device view (see dryrun.py note)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.query import (QuerySpec, make_products_ratings, make_rankings,
+                         make_uservisits, run_query)
+
+
+def test_running_example_products_ratings():
+    """The paper's Table 1 example: DISTINCT seller; JOIN on name."""
+    products, ratings = make_products_ratings()
+    r = run_query(QuerySpec("distinct", ("seller",), dict(d=8, w=2)), products)
+    assert set(np.asarray(r["output"]).tolist()) == {1, 2, 3}
+    j = run_query(QuerySpec("join", ("name", "name"), dict(
+        nbits=256, payload_a="price", payload_b="taste")),
+        (products, ratings))
+    # inner join: 4 of 5 rating names match (Cheetos doesn't)
+    assert len(j["output"]) == 4
+    assert j["forwarded"] < j["total"]  # Cheetos pruned
+
+
+def test_engine_matches_oracles(rng):
+    uv = make_uservisits(20_000, seed=3)
+    r = run_query(QuerySpec("distinct", ("source_ip",), dict(d=256, w=4)), uv)
+    truth = np.unique(np.asarray(uv.cols["source_ip"]))
+    assert set(np.asarray(r["output"]).tolist()) == set(truth.tolist())
+
+    r = run_query(QuerySpec("topn", ("ad_revenue",),
+                            dict(d=512, w=6, N=100)), uv)
+    true = np.sort(np.asarray(uv.cols["ad_revenue"]))[-100:]
+    assert np.allclose(np.sort(r["output"][0]), true)
+
+    r = run_query(QuerySpec("groupby", ("lang", "ad_revenue"),
+                            dict(d=16, w=4, agg="sum")), uv)
+    want = core.groupby_oracle(uv.cols["lang"], uv.cols["ad_revenue"], "sum")
+    assert set(r["output"]) == set(want)
+
+
+_MULTIWORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.query import QuerySpec, make_uservisits, make_rankings, run_query
+from repro import core
+
+mesh = jax.make_mesh((8,), ("data",))
+uv = make_uservisits(16000, seed=9)
+rk = make_rankings(8000, seed=10)
+out = {}
+
+r = run_query(QuerySpec("distinct", ("source_ip",), dict(d=128, w=4)), uv,
+              mesh=mesh)
+truth = set(np.unique(np.asarray(uv.cols["source_ip"])).tolist())
+out["distinct_ok"] = set(np.asarray(r["output"]).tolist()) == truth
+out["distinct_pruned"] = r["pruned_fraction"]
+
+r = run_query(QuerySpec("topn", ("ad_revenue",), dict(d=256, w=8, N=50)), uv,
+              mesh=mesh)
+true = np.sort(np.asarray(uv.cols["ad_revenue"]))[-50:]
+out["topn_ok"] = bool(np.allclose(np.sort(r["output"][0]), true))
+
+r = run_query(QuerySpec("join", ("dest_url", "page_url"), dict(
+    nbits=1 << 14, payload_a="duration", payload_b="avg_duration")),
+    (uv, rk), mesh=mesh)
+na, nb = 16000, 8000
+oracle = core.join_oracle(uv.cols["dest_url"][:na], uv.cols["duration"][:na],
+                          rk.cols["page_url"][:nb], rk.cols["avg_duration"][:nb])
+out["join_ok"] = r["output"] == oracle
+
+r = run_query(QuerySpec("having", ("lang", "ad_revenue"), dict(
+    threshold=20000.0, rows=3, width=512)), uv, mesh=mesh)
+want = core.having_oracle(uv.cols["lang"],
+                          uv.cols["ad_revenue"].astype(jnp.int32), 20000)
+got = sorted(r["output"])
+out["having_ok"] = got == want
+
+r = run_query(QuerySpec("groupby", ("lang", "ad_revenue"), dict(
+    d=16, w=4, agg="sum")), uv, mesh=mesh)
+want = core.groupby_oracle(uv.cols["lang"], uv.cols["ad_revenue"], "sum")
+out["groupby_ok"] = set(r["output"]) == set(want) and all(
+    abs(r["output"][k] - want[k]) < 1e-2 * max(1, abs(want[k])) for k in want)
+
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def test_multiworker_8_devices():
+    proc = subprocess.run([sys.executable, "-c", _MULTIWORKER],
+                          capture_output=True, text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    out = json.loads(line[0][len("RESULT:"):])
+    for k, v in out.items():
+        if k.endswith("_ok"):
+            assert v, f"{k} failed: {out}"
+    assert out["distinct_pruned"] > 0.5

@@ -1,0 +1,67 @@
+"""The paper's central invariant, property-tested across algorithms:
+for ANY S with A_Q(D) ⊆ S ⊆ D, Q(S) == Q(D) (§3 definition + §7.2
+retransmission tolerance). DISTINCT's version lives in
+test_core_pruning; these cover TOP-N, JOIN, HAVING and SKYLINE."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+
+def _superset(keep: np.ndarray, seed: int, p: float = 0.3) -> jnp.ndarray:
+    rs = np.random.default_rng(seed)
+    return jnp.asarray(keep | (rs.random(keep.shape[0]) < p))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10), st.integers(30, 150), st.integers(0, 999))
+def test_topn_superset_safety(N, m, seed):
+    rs = np.random.default_rng(seed)
+    v = jnp.asarray((rs.random(m) * 1e4 + 1).astype(np.float32))
+    keep = np.asarray(core.topn_rand_prune(v, d=16, w=8, seed=seed).keep)
+    s = _superset(keep, seed + 1)
+    a, _ = core.master_complete_topn(v, jnp.asarray(keep), N)
+    b, _ = core.master_complete_topn(v, s, N)
+    np.testing.assert_allclose(np.sort(np.asarray(a)), np.sort(np.asarray(b)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 999))
+def test_join_superset_safety(nkeys, seed):
+    rs = np.random.default_rng(seed)
+    ka = jnp.asarray(rs.integers(0, nkeys, 60).astype(np.uint32))
+    kb = jnp.asarray(rs.integers(nkeys // 2, nkeys + nkeys // 2, 60)
+                     .astype(np.uint32))
+    va = jnp.arange(60, dtype=jnp.int32)
+    vb = jnp.arange(60, dtype=jnp.int32)
+    ra, rb = core.join_prune(ka, kb, nbits=512)
+    sa = _superset(np.asarray(ra.keep), seed + 1)
+    sb = _superset(np.asarray(rb.keep), seed + 2)
+    assert core.master_complete_join(ka, va, sa, kb, vb, sb) \
+        == core.join_oracle(ka, va, kb, vb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 999))
+def test_having_superset_safety(nkeys, seed):
+    rs = np.random.default_rng(seed)
+    keys = jnp.asarray(rs.integers(0, nkeys, 200).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 9, 200).astype(np.int32))
+    thr = 40
+    r = core.having_prune(keys, vals, thr, rows=2, width=64)
+    s = _superset(np.asarray(r.keep), seed + 1)
+    assert core.master_complete_having(keys, vals, s, thr) \
+        == core.having_oracle(keys, vals, thr)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 3), st.integers(0, 999))
+def test_skyline_superset_safety(D, seed):
+    rs = np.random.default_rng(seed)
+    pts = jnp.asarray(rs.integers(1, 200, (120, D)).astype(np.float32))
+    keep = np.asarray(core.skyline_prune(pts, w=6).keep)
+    s = _superset(keep, seed + 1)
+    a = core.master_complete_skyline(pts, jnp.asarray(keep))
+    b = core.master_complete_skyline(pts, s)
+    assert bool(jnp.all(a == b)) and bool(jnp.all(a == core.skyline_oracle(pts)))
