@@ -1,13 +1,24 @@
-"""Benchmark harness utilities: timing + CSV emission.
+"""Benchmark harness utilities: timing + CSV + JSON emission.
 
 Every bench prints ``name,us_per_call,derived`` rows (one per paper
-table/figure datapoint) so downstream tooling can diff runs.
+table/figure datapoint) so downstream tooling can diff runs. Rows are
+also recorded in RESULTS; ``write_results`` merges them into
+BENCH_results.json (name → us_per_call) so the perf trajectory is
+machine-diffable across PRs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
+
+# name -> us_per_call for every emit() since process start
+RESULTS: dict[str, float] = {}
+
+RESULTS_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_results.json"
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -24,4 +35,21 @@ def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
 
 
 def emit(name: str, us: float, derived: str = ""):
+    RESULTS[name] = round(float(us), 1)
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_results(path: pathlib.Path | str | None = None):
+    """Merge this run's RESULTS into the JSON file (partial runs keep
+    earlier rows: individual bench modules can refresh just their own)."""
+    p = pathlib.Path(path) if path else RESULTS_PATH
+    merged: dict[str, float] = {}
+    if p.exists():
+        try:
+            merged = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(RESULTS)
+    p.write_text(json.dumps(dict(sorted(merged.items())), indent=1)
+                 + "\n")
+    return p

@@ -10,18 +10,21 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_completion, bench_distinct, bench_resources,
-                   bench_scale, bench_skyline, bench_topn, roofline)
+    from . import (bench_completion, bench_distinct, bench_engine,
+                   bench_resources, bench_scale, bench_skyline, bench_topn,
+                   roofline)
+    from .common import write_results
     print("name,us_per_call,derived")
     ok = True
-    for mod in (bench_distinct, bench_topn, bench_skyline, bench_scale,
-                bench_completion, bench_resources, roofline):
+    for mod in (bench_distinct, bench_topn, bench_skyline, bench_engine,
+                bench_scale, bench_completion, bench_resources, roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001
             ok = False
             print(f"{mod.__name__},-1,ERROR")
             traceback.print_exc()
+    print(f"wrote {write_results()}", file=sys.stderr)
     if not ok:
         sys.exit(1)
 

@@ -1,0 +1,32 @@
+"""Version-portable JAX API shims.
+
+The container toolchain pins one jax version, but the APIs this repo
+touches moved across 0.4.x → 0.5+: ``shard_map`` graduated from
+jax.experimental (where replication checking is ``check_rep``) to
+``jax.shard_map`` (``check_vma``), and the Pallas TPU compiler params
+class was renamed ``TPUCompilerParams`` → ``CompilerParams`` (see
+repro.kernels.common.compiler_params). Import from here instead of
+feature-testing at every call site.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """shard_map across jax versions; `check` maps to check_vma/check_rep.
+
+    The graduation to jax.shard_map and the check_rep → check_vma kwarg
+    rename happened in different releases, so the kwarg is picked from
+    the resolved function's signature, not from where it lives.
+    """
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    kwarg = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kwarg: check})

@@ -1,0 +1,25 @@
+"""Shared numeric sentinels for the Cheetah pruning stack.
+
+Single source of truth for the constants that were previously defined
+independently in core/topn.py, core/skyline.py and kernels/common.py.
+They are numpy scalars (not jnp) on purpose: inside Pallas kernel bodies
+a jnp constant would be a captured const, which pallas_call rejects,
+while numpy scalars lower to jaxpr literals. In plain jnp code they
+behave identically to the jnp scalars they replace.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# "minus infinity" for f32 value streams: empty TOP-N / skyline slots,
+# masked-out scores. Finite (not -inf) so arithmetic on empty slots stays
+# NaN-free on the switch data path.
+NEG = np.float32(-3.4e38)
+
+# "plus infinity" counterpart: TOP-N ladder warm-up running min, MIN
+# aggregate identity.
+POS = np.float32(3.4e38)
+
+# Empty-slot marker for uint32 (finger)print caches. Always paired with a
+# valid-mask because 0 is a representable fingerprint.
+SENTINEL = np.uint32(0)

@@ -5,7 +5,7 @@ Paper: "Cheetah: Accelerating Database Queries with Switch Pruning"
 keep-mask selecting A_Q(D) ⊆ D with Q(A_Q(D)) = Q(D); the master completes
 the query on the survivors.
 """
-from .pruning import PruneResult, compact, prune_rate_vs_opt
+from .pruning import PruneResult, compact, compact_argsort, prune_rate_vs_opt
 from .hashing import mix32, hash_mod, multi_hash, fingerprint, fingerprint_bits_thm4
 from .distinct import (distinct_prune, master_complete_distinct,
                        opt_keep_distinct, thm1_bound)
@@ -19,8 +19,11 @@ from .skyline import (skyline_prune, skyline_oracle, opt_keep_skyline,
 from .groupby import groupby_prune, master_complete_groupby, groupby_oracle
 from .filter import (Pred, And, Or, TRUE, relax, filter_prune, evaluate,
                      evaluate_truthtable, master_complete_filter)
+from .engine import (ALGORITHMS, MODES, DistinctMerged, TopNDetMerged,
+                     engine_prune, merge_states)
 from .planner import (SwitchProfile, ResourceFootprint, footprint,
-                      pack_queries, rule_count, PackingPlan)
+                      pack_queries, rule_count, PackingPlan,
+                      MultiSwitchPlan, plan_multi_switch, optimal_shards)
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

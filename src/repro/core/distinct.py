@@ -16,10 +16,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..constants import SENTINEL  # noqa: F401  (re-export; see constants.py)
 from .hashing import hash_mod
 from .pruning import PruneResult
-
-SENTINEL = jnp.uint32(0)  # paired with a valid-mask; value 0 is representable
 
 
 @jax.tree_util.register_dataclass

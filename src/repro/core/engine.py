@@ -1,0 +1,402 @@
+"""Sharded pruning engine: superset-safe parallel execution (paper §3/§7.2).
+
+Cheetah's correctness contract is *superset safety*: forwarding any
+superset of a pruner's keep set leaves the query answer unchanged. That
+property makes pruning embarrassingly parallelizable — running S
+independent pruners over S shards of the stream and unioning the
+survivors still yields a correct superset — and this module exploits it
+behind one API, ``engine_prune(algo, *streams, mode=..., shards=S)``.
+
+Execution modes → the paper's deployment story:
+
+``scan``
+    The sequential oracle: one switch on the data path streaming every
+    entry through ``jax.lax.scan`` (the paper's single-ToR deployment,
+    §2/§8). Exact per-packet semantics; O(m) sequential steps.
+
+``sharded``
+    S switch replicas, each seeing a contiguous 1/S slice of the stream
+    (the paper's multi-rack scale-out sketch: one Cheetah switch per
+    ToR, partitioned tables — cf. §9 "Deployment"). Implemented as
+    ``jax.vmap`` of the existing scan bodies over S shards; the keep
+    masks are disjoint so their union is just the concatenation. Pure
+    O(m/S) speedup; pruning is looser because no shard sees another
+    shard's state. (HAVING is the exception: its keep rule compares a
+    *global* aggregate against the threshold, so shard-local decisions
+    are unsafe and ``sharded`` transparently runs the two-pass merge —
+    the algorithm is inherently two-pass even on one switch.)
+
+``two_pass``
+    The master-assisted variant (paper §4.3's two-round refinement
+    generalized): pass 1 builds shard-local switch states in parallel,
+    a per-algorithm ``merge_states`` combinator folds them into one
+    global state at the master (max over TOP-N ladder thresholds /
+    per-row top-w union, FIFO-cache union for DISTINCT, dominance-set
+    merge for SKYLINE, sketch/cache addition for HAVING / GROUP BY),
+    and pass 2 applies the merged state as a fully vectorized,
+    scan-free filter. Tighter pruning than ``sharded`` at near-parallel
+    cost.
+
+Correctness note (tested in tests/test_engine.py and
+tests/test_superset_safety.py): the parallel modes are *not*
+mask-supersets of the sequential scan — e.g. a shard whose first N
+entries are large advances its TOP-N ladder faster than the global scan
+would. What holds, and what the paper's contract actually requires, is
+that every mode's keep mask is a superset of the *minimal correct
+survivor set* (OPT: the true top-N / first occurrences / skyline /
+qualifying keys), so master completion over any mode's survivors — or
+any superset of them, §7.2 — reproduces Q(D) exactly.
+
+The Pallas analogue (grid-parallel kernels with one state replica per
+grid program + a merge step) lives in ``repro.kernels.parallel``;
+multi-switch placement/cost modeling lives in ``repro.core.planner``
+(``plan_multi_switch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..constants import NEG
+from .distinct import distinct_prune
+from .groupby import GroupByState, groupby_prune
+from .hashing import hash_mod
+from .having import having_prune
+from .pruning import PruneResult
+from .sketches import CountMin
+from .skyline import SkylineState, skyline_prune
+from .topn import TopNRandState, topn_det_prune, topn_rand_prune
+
+MODES = ("scan", "sharded", "two_pass")
+ALGORITHMS = ("topn_det", "topn_rand", "distinct", "skyline", "groupby",
+              "having")
+
+
+# ---------------------------------------------------------- merged states
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TopNDetMerged:
+    """Global TOP-N filter state: one threshold, provably query-safe.
+
+    Each shard ladder only advances to t_i after observing >= N entries
+    >= t_i, so >= N entries globally are >= any shard's threshold — the
+    N-th largest global value is >= it, and filtering x < threshold can
+    never drop a true top-N entry. The max over shards is therefore the
+    tightest safe merge.
+    """
+
+    threshold: jnp.ndarray  # f32 scalar
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistinctMerged:
+    """Union of the shard FIFO/LRU caches, with column-owner shard ids.
+
+    Pass 2 prunes a shard-kept entry iff its value sits in a *lower*
+    ranked shard's final cache: caches have no false positives, so the
+    lowest shard in which a value ever appeared keeps its shard-first
+    occurrence — at least one copy of every distinct value survives.
+    """
+
+    slots: jnp.ndarray  # uint32[d, S*w]
+    valid: jnp.ndarray  # bool[d, S*w]
+    shard: jnp.ndarray  # int32[S*w] — owner shard of each cache column
+
+
+# ------------------------------------------------------------- algorithms
+@dataclasses.dataclass(frozen=True)
+class _AlgoSpec:
+    """How the engine runs one pruning algorithm.
+
+    scan(streams, params)            -> PruneResult (sequential body)
+    pads(streams, params)            -> per-stream pad fill values
+    merge(stacked_states, params)    -> merged global state
+    apply(merged, shard_streams, shard_keep, params) -> keep bool[S, n]
+    """
+
+    scan: Callable[[tuple, dict], PruneResult]
+    pads: Callable[[tuple, dict], tuple]
+    merge: Callable[[Any, dict], Any]
+    apply: Callable[[Any, tuple, jnp.ndarray, dict], jnp.ndarray]
+    # True when shard-local keep decisions are unsafe without the merged
+    # global state (HAVING: a key's global sum can clear the threshold
+    # while every shard-local estimate stays below it). `sharded` then
+    # runs the merge+apply anyway — the algorithm is inherently
+    # two-pass, even sequentially.
+    sharded_needs_merge: bool = False
+
+
+def _cols_by_shard(stacked: jnp.ndarray) -> jnp.ndarray:
+    """[S, d, w] per-shard row state -> [d, S*w] cache-column union."""
+    S, d, w = stacked.shape
+    return jnp.moveaxis(stacked, 0, 1).reshape(d, S * w)
+
+
+# TOP-N deterministic (threshold ladder, Ex. 3) --------------------------
+def _topn_det_scan(streams, p):
+    return topn_det_prune(streams[0], N=p["N"], w=p.get("w", 4))
+
+
+def _topn_det_merge(st, p):
+    # same math as the scan body: thr = t0 * 2^cur_level (NEG: no level)
+    thr = jnp.where(st.cur_level >= 0,
+                    st.t0 * (2.0 ** st.cur_level.astype(jnp.float32)),
+                    NEG)
+    return TopNDetMerged(threshold=jnp.max(thr))
+
+
+def _topn_det_apply(merged, streams, keep1, p):
+    del keep1
+    return streams[0].astype(jnp.float32) >= merged.threshold
+
+
+# TOP-N randomized (d×w rolling matrix, Ex. 7) ---------------------------
+def _topn_rand_scan(streams, p):
+    return topn_rand_prune(streams[0], d=p["d"], w=p["w"],
+                           seed=p.get("seed", 0))
+
+
+def _topn_rand_merge(st, p):
+    # per-row top-w of the union of the shard rows (descending), i.e.
+    # exactly the state a single switch holding d rows of width w would
+    # converge to after seeing every shard's survivors.
+    merged = -jnp.sort(-_cols_by_shard(st.vals), axis=1)[:, : p["w"]]
+    return TopNRandState(vals=merged)
+
+
+def _topn_rand_apply(merged, streams, keep1, p):
+    del keep1
+    x = streams[0].astype(jnp.float32)  # [S, n]
+    n = x.shape[-1]
+    # shards replay the scan's shard-local row assignment (stream index)
+    rows = hash_mod(jnp.arange(n, dtype=jnp.uint32), p["d"],
+                    seed=p.get("seed", 0))
+    return x >= merged.vals[:, -1][rows][None, :]
+
+
+# DISTINCT (d×w fingerprint cache, Ex. 2) --------------------------------
+def _distinct_scan(streams, p):
+    return distinct_prune(streams[0], d=p["d"], w=p["w"],
+                          policy=p.get("policy", "lru"),
+                          seed=p.get("seed", 0))
+
+
+def _distinct_merge(st, p):
+    S, _, w = st.slots.shape
+    return DistinctMerged(
+        slots=_cols_by_shard(st.slots),
+        valid=_cols_by_shard(st.valid),
+        shard=jnp.repeat(jnp.arange(S, dtype=jnp.int32), w),
+    )
+
+
+def _distinct_apply(merged, streams, keep1, p):
+    x = streams[0]  # uint32[S, n]
+    rows = hash_mod(x, p["d"], seed=p.get("seed", 0))
+    slots_g = merged.slots[rows]  # [S, n, S*w]
+    valid_g = merged.valid[rows]
+    sidx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None, None]
+    dup_lower = jnp.any((slots_g == x[..., None]) & valid_g
+                        & (merged.shard[None, None, :] < sidx), axis=-1)
+    return keep1 & ~dup_lower
+
+
+# SKYLINE (w stored points, Ex. 6) ---------------------------------------
+def _skyline_scan(streams, p):
+    return skyline_prune(streams[0], w=p["w"], score=p.get("score", "aph"))
+
+
+def _skyline_merge(st, p):
+    S, w, D = st.points.shape
+    pts = st.points.reshape(S * w, D)
+    scs = st.scores.reshape(S * w)
+    order = jnp.argsort(-scs)  # keep the SkylineState descending invariant
+    return SkylineState(points=pts[order], scores=scs[order])
+
+
+def _skyline_apply(merged, streams, keep1, p):
+    del keep1
+    x = streams[0].astype(jnp.float32)  # [S, n, D]
+    P, Sc = merged.points, merged.scores
+    dom = (jnp.all(x[:, :, None, :] <= P[None, None], axis=-1)
+           & jnp.any(x[:, :, None, :] < P[None, None], axis=-1)
+           & (Sc > NEG)[None, None, :])
+    # a true skyline point is dominated by nothing, so it always survives
+    return ~jnp.any(dom, axis=-1)
+
+
+# GROUP BY (d×w key/aggregate cache, §4.2/§8) ----------------------------
+def _groupby_scan(streams, p):
+    return groupby_prune(streams[0], streams[1], d=p["d"], w=p["w"],
+                         agg=p.get("agg", "sum"), seed=p.get("seed", 0))
+
+
+def _groupby_merge(st, p):
+    # cache-column union: the master's fold is a commutative monoid, so
+    # duplicate keys across shard columns fold exactly in completion.
+    return GroupByState(keys=_cols_by_shard(st.keys),
+                        aggs=_cols_by_shard(st.aggs),
+                        valid=_cols_by_shard(st.valid))
+
+
+def _groupby_apply(merged, streams, keep1, p):
+    del merged, streams, p
+    return keep1  # all-False: every entry is absorbed into switch state
+
+
+# HAVING (Count-Min + threshold, Ex. 5) ----------------------------------
+def _having_scan(streams, p):
+    values = streams[1] if len(streams) > 1 else None
+    return having_prune(streams[0], values, p["threshold"],
+                        rows=p.get("rows", 3), width=p.get("width", 1024),
+                        agg=p.get("agg", "sum"), seed=p.get("seed", 0))
+
+
+def _having_merge(st, p):
+    # sketch addition: CMS build is order-independent scatter-add, so the
+    # summed table is bit-identical to a single sequential build.
+    return CountMin(table=jnp.sum(st.table, axis=0), seed=st.seed)
+
+
+def _having_apply(merged, streams, keep1, p):
+    del keep1
+    from .sketches import cms_query
+
+    keys = streams[0]
+    est = cms_query(merged, keys.reshape(-1)).reshape(keys.shape)
+    return est > p["threshold"]
+
+
+# ------------------------------------------------------------------- pads
+def _value_pads(streams, p):
+    return (NEG,)
+
+
+def _fingerprint_pads(streams, p):
+    return (jnp.uint32(0),)
+
+
+def _skyline_pads(streams, p):
+    # a (NEG, ..., NEG) point dominates nothing and scores below/at every
+    # real point, so tail pads only (at worst) loosen the last shard.
+    return (NEG,)
+
+
+def _fold_identity(dtype, agg):
+    """Value whose fold into any aggregate is a no-op, in the stream dtype."""
+    if agg == "sum":
+        return jnp.zeros((), dtype)
+    info = (jnp.finfo(dtype) if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.iinfo(dtype))
+    return jnp.asarray(info.max if agg == "min" else info.min, dtype)
+
+
+def _groupby_pads(streams, p):
+    agg = p.get("agg", "sum")
+    if agg not in ("sum", "min", "max"):
+        raise ValueError(
+            f"groupby agg={agg!r} has no pad identity (each padded entry "
+            f"would add 1); pass a stream length divisible by `shards`")
+    # route pads at the first real key with the fold identity: exact no-op
+    return (streams[0][0], _fold_identity(streams[1].dtype, agg))
+
+
+def _having_pads(streams, p):
+    # pads only inflate CMS estimates; the overestimate stays one-sided,
+    # which is the direction HAVING's superset safety relies on.
+    return (streams[0][0],) + ((0,) if len(streams) > 1 else ())
+
+
+_SPECS: dict[str, _AlgoSpec] = {
+    "topn_det": _AlgoSpec(_topn_det_scan, _value_pads,
+                          _topn_det_merge, _topn_det_apply),
+    "topn_rand": _AlgoSpec(_topn_rand_scan, _value_pads,
+                           _topn_rand_merge, _topn_rand_apply),
+    "distinct": _AlgoSpec(_distinct_scan, _fingerprint_pads,
+                          _distinct_merge, _distinct_apply),
+    "skyline": _AlgoSpec(_skyline_scan, _skyline_pads,
+                         _skyline_merge, _skyline_apply),
+    "groupby": _AlgoSpec(_groupby_scan, _groupby_pads,
+                         _groupby_merge, _groupby_apply),
+    "having": _AlgoSpec(_having_scan, _having_pads,
+                        _having_merge, _having_apply,
+                        sharded_needs_merge=True),
+}
+
+
+# ------------------------------------------------------------------ engine
+def _shard(arr: jnp.ndarray, shards: int, fill) -> jnp.ndarray:
+    """[m, ...] -> [S, ceil(m/S), ...] contiguous chunks, tail-padded."""
+    m = arr.shape[0]
+    n = -(-m // shards)
+    pad = shards * n - m
+    if pad:
+        row = jnp.broadcast_to(jnp.asarray(fill, arr.dtype),
+                               (pad,) + arr.shape[1:])
+        arr = jnp.concatenate([arr, row])
+    return arr.reshape((shards, n) + arr.shape[1:])
+
+
+def _unshard(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    return x.reshape((-1,) + x.shape[2:])[:m]
+
+
+def merge_states(algo: str, stacked_states, **params):
+    """Fold S shard-local switch states into one global state.
+
+    ``stacked_states`` is the pytree a vmapped scan returns: every array
+    leaf carries a leading shard axis. Exposed for tests and for callers
+    that run pass 1 themselves (e.g. the Pallas grid-parallel kernels).
+    """
+    return _SPECS[algo].merge(stacked_states, params)
+
+
+def engine_prune(algo: str, *streams, mode: str = "scan", shards: int = 8,
+                 **params) -> PruneResult:
+    """Run pruner `algo` over its stream(s) in the requested mode.
+
+    streams: the algorithm's data arrays, all sharing leading dim m
+    (topn/distinct/skyline: one array; groupby/having: keys, values —
+    having accepts values=None for COUNT). Non-divisible m is handled by
+    tail-padding the final shard with algorithm-safe neutral entries.
+
+    Returns a PruneResult whose keep mask is over the original m
+    entries. state is the stacked per-shard states (`sharded`), the
+    merged global state (`two_pass`), or the final scan state (`scan`).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    spec = _SPECS[algo]  # KeyError = unknown algorithm
+    streams = tuple(s for s in streams if s is not None)
+    m = streams[0].shape[0]
+
+    if mode == "scan" or shards <= 1:
+        return spec.scan(streams, params)
+    if shards > m:
+        raise ValueError(f"shards={shards} exceeds stream length {m}")
+
+    # pads are only consulted when the final shard actually needs filling
+    fills = (spec.pads(streams, params) if m % shards
+             else (0,) * len(streams))
+    shard_streams = tuple(_shard(s, shards, f)
+                          for s, f in zip(streams, fills))
+    r1 = jax.vmap(lambda *sh: spec.scan(sh, params))(*shard_streams)
+    # emissions are switch→master traffic, not per-entry masks: keep the
+    # full padded length — a tail pad can evict a REAL partial (GROUP BY)
+    # whose emission sits past position m and must still reach the master
+    emitted = (None if r1.emitted is None
+               else jax.tree_util.tree_map(
+                   lambda e: e.reshape((-1,) + e.shape[2:]), r1.emitted))
+
+    if mode == "sharded" and not spec.sharded_needs_merge:
+        return PruneResult(keep=_unshard(r1.keep, m), state=r1.state,
+                           emitted=emitted)
+
+    merged = spec.merge(r1.state, params)
+    keep2 = spec.apply(merged, shard_streams, r1.keep, params)
+    return PruneResult(keep=_unshard(keep2, m), state=merged,
+                       emitted=emitted)

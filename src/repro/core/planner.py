@@ -128,6 +128,71 @@ def pack_queries(queries: dict[str, ResourceFootprint],
     return PackingPlan(placements, min(hi + 1, prof.stages), True)
 
 
+@dataclasses.dataclass
+class MultiSwitchPlan:
+    """Placement of a workload on S switch replicas + a merging master.
+
+    The engine's `sharded`/`two_pass` modes model exactly this: each of
+    `shards` switches prunes a 1/S slice of the stream with the same
+    per-switch footprint, then ships its final state to the master,
+    which folds the S states (`merge_states`) and — in two_pass — runs
+    the merged-state filter.
+    """
+
+    shards: int
+    per_switch: PackingPlan      # identical replica placement
+    entries_per_switch: int      # stream slice each replica ingests
+    merge_bytes: int             # total state shipped to the master
+    est_speedup: float           # vs a single sequential switch
+    feasible: bool
+    reason: str = ""
+
+
+# master-side cost of folding one state byte, in units of per-entry
+# stream work (the merge is vectorized, entries stream one at a time)
+_MERGE_BYTE_COST = 1.0 / 64.0
+
+
+def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
+                      shards: int,
+                      profile: SwitchProfile | None = None) -> MultiSwitchPlan:
+    """Model running `queries` over an m-entry stream on S switch replicas.
+
+    Every replica must fit the full query set (same packing problem as a
+    single switch — states are replicated, not split), so feasibility is
+    `pack_queries` on one profile. The speedup model charges each replica
+    ceil(m/S) entries of streaming work plus the master's fold over the
+    S shipped states: T(S) = m/S + c·S·state_bytes. Diminishing returns
+    appear once the merge term dominates — see `optimal_shards`.
+    """
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    plan = pack_queries(queries, profile)
+    if not plan.feasible:
+        return MultiSwitchPlan(shards, plan, 0, 0, 0.0, False, plan.reason)
+    state_bytes = sum(fp.sram_bytes for fp in queries.values())
+    entries = math.ceil(m / shards)
+    merge_bytes = shards * state_bytes
+    t_parallel = entries + _MERGE_BYTE_COST * merge_bytes
+    return MultiSwitchPlan(
+        shards=shards, per_switch=plan, entries_per_switch=entries,
+        merge_bytes=merge_bytes,
+        est_speedup=m / t_parallel, feasible=True)
+
+
+def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096) -> int:
+    """argmin_S of T(S) = m/S + c·S·state_bytes: S* = sqrt(m / (c·bytes)).
+
+    Clamped to [1, max_shards]; with zero state (pure filters) the model
+    degenerates and every switch you can get helps.
+    """
+    c = _MERGE_BYTE_COST * state_bytes
+    if c <= 0:
+        return max_shards
+    s = int(round(math.sqrt(m / c)))
+    return max(1, min(s, max_shards))
+
+
 def rule_count(algo: str, **p) -> int:
     """Control-plane rules per query: 10-20 (paper §7.1)."""
     base = {"distinct_lru": 12, "distinct_fifo": 12, "topn_det": 14,

@@ -33,9 +33,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..constants import NEG
 from .pruning import PruneResult
-
-NEG = jnp.float32(-3.4e38)
 
 
 def score_sum(x: jnp.ndarray) -> jnp.ndarray:

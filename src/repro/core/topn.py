@@ -18,10 +18,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..constants import NEG, POS
 from .hashing import hash_mod
 from .pruning import PruneResult
-
-NEG = jnp.float32(-3.4e38)
 
 
 # ---------------------------------------------------------------- randomized
@@ -116,7 +115,7 @@ def topn_det_prune(values: jnp.ndarray, *, N: int, w: int = 4) -> PruneResult:
         return TopNDetState(t0=t0, counts=counts, seen=s.seen + 1, cur_level=cur), keep
 
     init = TopNDetState(
-        t0=jnp.float32(3.4e38), counts=jnp.zeros(w, jnp.int32),
+        t0=jnp.float32(POS), counts=jnp.zeros(w, jnp.int32),
         seen=jnp.int32(0), cur_level=jnp.int32(-1),
     )
     state, keep = jax.lax.scan(body, init, v)

@@ -4,4 +4,4 @@ Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
 validated in interpret mode against ref.py (pure-jnp oracle with
 identical block semantics). Public API in ops.py.
 """
-from . import ops, ref
+from . import ops, parallel, ref

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import gather_rows, hash_mod, onehot_f32
+from .common import compiler_params, gather_rows, hash_mod, onehot_f32
 
 
 def _build_kernel(nbits, H, seed, nblocks, k_ref, out_ref, b_ref):
@@ -50,8 +50,7 @@ def bloom_build_kernel(keys: jnp.ndarray, *, nbits: int, num_hashes: int = 3,
         out_specs=pl.BlockSpec((nbits,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((nbits,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((nbits,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=compiler_params(("arbitrary",)),
         interpret=interpret,
     )(keys)
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import gather_rows, hash_mod, onehot_f32
+from .common import compiler_params, gather_rows, hash_mod, onehot_f32
 
 
 def _build_kernel(rows, width, seed, nblocks, k_ref, w_ref, out_ref, t_ref):
@@ -51,8 +51,7 @@ def cms_build_kernel(keys: jnp.ndarray, weights: jnp.ndarray, *, rows: int,
         out_specs=pl.BlockSpec((rows, width), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, width), jnp.float32),
         scratch_shapes=[pltpu.VMEM((rows, width), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=compiler_params(("arbitrary",)),
         interpret=interpret,
     )(keys, weights)
 

@@ -12,6 +12,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.pallas import tpu as pltpu
+
+from ..constants import NEG, POS, SENTINEL  # noqa: F401  (shared sentinels)
 
 # numpy scalars → jaxpr literals (jnp constants would be captured consts,
 # which pallas_call rejects)
@@ -19,7 +22,15 @@ _C1 = np.uint32(0x85EBCA6B)
 _C2 = np.uint32(0xC2B2AE35)
 _C3 = np.uint32(0x9E3779B9)
 
-NEG = np.float32(-3.4e38)
+# jax renamed TPUCompilerParams → CompilerParams; support both so the
+# kernels run on every toolchain the container may carry.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(dimension_semantics: tuple) -> object:
+    """Version-portable pltpu compiler params for pallas_call."""
+    return _COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics)
 
 
 def mix32(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:

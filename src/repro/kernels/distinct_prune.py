@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import gather_rows, hash_mod, onehot_f32, split16
+from .common import compiler_params, gather_rows, hash_mod, onehot_f32, split16
 
 
 def _kernel(d, w, seed, x_ref, keep_ref, slo_ref, shi_ref, val_ref, head_ref):
@@ -84,7 +84,6 @@ def distinct_prune_kernel(values: jnp.ndarray, *, d: int, w: int,
             pltpu.VMEM((d, w), jnp.float32),  # valid
             pltpu.VMEM((d,), jnp.int32),      # FIFO head
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=compiler_params(("arbitrary",)),
         interpret=interpret,
     )(values)

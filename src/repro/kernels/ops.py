@@ -10,8 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import parallel, ref
 from .bloom_filter import bloom_build_kernel, bloom_query_kernel
+from .common import NEG
 from .cms_sketch import cms_build_kernel, cms_query_kernel
 from .distinct_prune import distinct_prune_kernel
 from .skyline_prune import skyline_prune_kernel
@@ -45,12 +46,75 @@ def distinct_prune(values: jnp.ndarray, *, d: int, w: int, block: int = 256,
 
 def topn_prune(values: jnp.ndarray, *, d: int, w: int, block: int = 256,
                seed: int = 0, use_ref: bool = False) -> jnp.ndarray:
-    v, m = _pad_to(values.astype(jnp.float32), block, -3.4e38)
+    v, m = _pad_to(values.astype(jnp.float32), block, NEG)
     if use_ref:
         keep = ref.topn_block_ref(v, d=d, w=w, block=block, seed=seed)
     else:
         keep = topn_prune_kernel(v, d=d, w=w, block=block, seed=seed,
                                  interpret=_interpret())
+    return keep[:m].astype(bool)
+
+
+def distinct_prune_parallel(values: jnp.ndarray, *, d: int, w: int,
+                            shards: int = 8, block: int = 256, seed: int = 0,
+                            use_ref: bool = False) -> jnp.ndarray:
+    """Grid-parallel two-pass DISTINCT: S state replicas + cache-union merge.
+
+    Same correctness contract as engine_prune(..., mode="two_pass"): the
+    keep mask is a superset of the true first occurrences, not of the
+    sequential kernel's mask.
+    """
+    v, m = _pad_to(values, shards * block, 0)
+    if use_ref:
+        keep, _ = parallel.distinct_parallel_ref(v, d=d, w=w, shards=shards,
+                                                 block=block, seed=seed)
+    else:
+        it = _interpret()
+        keep1, lo, hi, valid = parallel.distinct_shard_states_kernel(
+            v, d=d, w=w, shards=shards, block=block, seed=seed, interpret=it)
+        mlo, mhi, owner = parallel.merge_distinct_states(lo, hi, valid)
+        keep = parallel.distinct_apply_kernel(
+            v, keep1, mlo, mhi, owner, d=d, shards=shards, block=block,
+            seed=seed, interpret=it)
+    return keep[:m].astype(bool)
+
+
+def topn_prune_parallel(values: jnp.ndarray, *, d: int, w: int,
+                        shards: int = 8, block: int = 256, seed: int = 0,
+                        use_ref: bool = False) -> jnp.ndarray:
+    """Grid-parallel two-pass TOP-N: per-shard matrices + top-w union."""
+    v, m = _pad_to(values.astype(jnp.float32), shards * block, NEG)
+    if use_ref:
+        keep, _ = parallel.topn_parallel_ref(v, d=d, w=w, shards=shards,
+                                             block=block, seed=seed)
+    else:
+        it = _interpret()
+        _, states = parallel.topn_shard_states_kernel(
+            v, d=d, w=w, shards=shards, block=block, seed=seed, interpret=it)
+        merged = parallel.merge_topn_states(states, w)
+        keep = parallel.topn_apply_kernel(v, merged, d=d, shards=shards,
+                                          block=block, seed=seed,
+                                          interpret=it)
+    return keep[:m].astype(bool)
+
+
+def skyline_prune_parallel(points: jnp.ndarray, *, w: int, shards: int = 8,
+                           block: int = 256, score: str = "aph",
+                           use_ref: bool = False) -> jnp.ndarray:
+    """Grid-parallel two-pass SKYLINE: shard stores + dominance-set merge."""
+    # NEG pads (not 0.0): a (NEG,..,NEG) point dominates nothing even for
+    # non-positive data, while a zero point dominates all-negative points
+    p, m = _pad_to(points.astype(jnp.float32), shards * block, NEG)
+    if use_ref:
+        keep, _ = parallel.skyline_parallel_ref(p, w=w, shards=shards,
+                                                block=block, score=score)
+    else:
+        it = _interpret()
+        _, P, S = parallel.skyline_shard_states_kernel(
+            p, w=w, shards=shards, block=block, score=score, interpret=it)
+        mp, ms = parallel.merge_skyline_states(P, S)
+        keep = parallel.skyline_apply_kernel(p, mp, ms, block=block,
+                                             interpret=it)
     return keep[:m].astype(bool)
 
 
@@ -104,7 +168,7 @@ def bloom_query(bits: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int = 3,
 
 def skyline_prune(points: jnp.ndarray, *, w: int, block: int = 256,
                   score: str = "aph", use_ref: bool = False) -> jnp.ndarray:
-    p, m = _pad_to(points.astype(jnp.float32), block, 0.0)
+    p, m = _pad_to(points.astype(jnp.float32), block, NEG)  # see parallel note
     if use_ref:
         keep = ref.skyline_block_ref(p, w=w, block=block, score=score)
     else:

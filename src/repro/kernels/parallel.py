@@ -1,0 +1,420 @@
+"""Grid-parallel Pallas pruning kernels (the engine's two_pass on TPU).
+
+The sequential kernels in topn_prune.py / distinct_prune.py /
+skyline_prune.py carry switch state in a VMEM scratch across grid steps,
+which forces ``dimension_semantics=("arbitrary",)`` — the whole grid
+serializes. Here each grid program owns a *state replica* for one shard
+(a contiguous 1/S slice of the stream), so the grid is declared
+``("parallel",)`` and blocks no longer serialize:
+
+  pass 1  S programs; each streams its shard chunk-by-chunk with the
+          exact block semantics of the sequential kernel (one state
+          insertion per row per chunk) and writes its final state to an
+          output indexed by the program id.
+  merge   plain-XLA fold of the S states (per-row top-w union for
+          TOP-N, cache-column union + owner ranks for DISTINCT,
+          dominance-set concat for SKYLINE). This is a tiny [d, S·w]
+          tensor op — bandwidth-trivial next to the stream — so it does
+          not warrant a dedicated kernel; it runs between the two
+          pallas_calls.
+  pass 2  an embarrassingly parallel filter kernel applying the merged
+          state to every block (grid m/B, ``("parallel",)``).
+
+Every kernel has a pure-jnp mirror (vmapped block oracles from ref.py +
+the same merge/apply math) used for differential testing and as the
+CPU-fallback `use_ref` path in ops.py. Correctness contract matches
+repro.core.engine two_pass: keep masks are supersets of the minimal
+correct survivor set, not of the sequential scan's mask.
+
+VMEM budget per program: the same d×w state as the sequential kernels
+plus one B-entry chunk — the shard length only affects how many chunks
+the in-kernel fori_loop walks, not residency.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+from .common import (NEG, compiler_params, gather_rows, hash_mod,
+                     onehot_f32, split16)
+
+
+def _iota1(n: int) -> jnp.ndarray:
+    """1D iota via 2D broadcast (TPU pallas requires >= 2D iota)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+
+
+# ======================================================= TOP-N (rand, Ex. 7)
+def _topn_shard_kernel(d, w, block, nchunks, seed,
+                       x_ref, keep_ref, sout_ref, s_ref):
+    s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    def chunk(c, carry):
+        x = x_ref[pl.ds(c * block, block)].astype(jnp.float32)
+        lidx = c * block + _iota1(block)  # shard-local stream index
+        rows = hash_mod(lidx.astype(jnp.uint32), d, seed)
+        oh = onehot_f32(rows, d)
+        S = s_ref[...]
+        row_min = S[:, -1]
+        my_min = gather_rows(oh, row_min[:, None])[:, 0]
+        keep_ref[pl.ds(c * block, block)] = (x >= my_min).astype(jnp.int32)
+        cand = jnp.max(jnp.where(oh > 0.5, x[:, None], NEG), axis=0)
+        do = cand > row_min
+        wcols = jax.lax.broadcasted_iota(jnp.int32, (d, w), 1)
+        pos = jnp.sum(cand[:, None] <= S, axis=1)
+        rolled = jnp.concatenate([S[:, :1], S[:, :-1]], axis=1)
+        shifted = jnp.where(wcols > pos[:, None], rolled, S)
+        inserted = jnp.where(wcols == pos[:, None], cand[:, None], shifted)
+        s_ref[...] = jnp.where(do[:, None], inserted, S)
+        return carry
+
+    jax.lax.fori_loop(0, nchunks, chunk, 0)
+    sout_ref[...] = s_ref[...][None]
+
+
+@partial(jax.jit, static_argnames=("d", "w", "shards", "block", "seed",
+                                   "interpret"))
+def topn_shard_states_kernel(values: jnp.ndarray, *, d: int, w: int,
+                             shards: int, block: int = 256, seed: int = 0,
+                             interpret: bool = True):
+    """Pass 1: per-shard keep int32[m] + states f32[shards, d, w]."""
+    m = values.shape[0]
+    assert m % (shards * block) == 0, "pad to a multiple of shards*block"
+    shard_len = m // shards
+    return pl.pallas_call(
+        partial(_topn_shard_kernel, d, w, block, shard_len // block, seed),
+        grid=(shards,),
+        in_specs=[pl.BlockSpec((shard_len,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((shard_len,), lambda i: (i,)),
+                   pl.BlockSpec((1, d, w), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
+                   jax.ShapeDtypeStruct((shards, d, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, w), jnp.float32)],
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(values.astype(jnp.float32))
+
+
+def merge_topn_states(states: jnp.ndarray, w: int) -> jnp.ndarray:
+    """[S, d, w] shard matrices -> [d, w] per-row top-w of the union."""
+    S, d, _ = states.shape
+    cols = jnp.moveaxis(states, 0, 1).reshape(d, -1)
+    return -jnp.sort(-cols, axis=1)[:, :w]
+
+
+def _topn_apply_kernel(d, block, seed, bpshard,
+                       x_ref, rmin_ref, keep_ref):
+    x = x_ref[...].astype(jnp.float32)
+    c = pl.program_id(0) % bpshard  # chunk index within the owning shard
+    lidx = c * block + _iota1(block)
+    rows = hash_mod(lidx.astype(jnp.uint32), d, seed)
+    my_min = gather_rows(onehot_f32(rows, d), rmin_ref[...][:, None])[:, 0]
+    keep_ref[...] = (x >= my_min).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("d", "shards", "block", "seed",
+                                   "interpret"))
+def topn_apply_kernel(values: jnp.ndarray, merged: jnp.ndarray, *, d: int,
+                      shards: int, block: int = 256, seed: int = 0,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Pass 2: keep = value >= merged row minimum. Fully parallel grid."""
+    m = values.shape[0]
+    bpshard = m // shards // block
+    return pl.pallas_call(
+        partial(_topn_apply_kernel, d, block, seed, bpshard),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(values.astype(jnp.float32), merged[:, -1])
+
+
+def topn_parallel_ref(values, *, d, w, shards, block, seed=0):
+    """jnp mirror of pass1+merge+pass2 (vmapped block oracle)."""
+    m = values.shape[0]
+    sh = values.reshape(shards, m // shards)
+    _, states = jax.vmap(lambda v: ref.topn_block_ref(
+        v, d=d, w=w, block=block, seed=seed, return_state=True))(sh)
+    merged = merge_topn_states(states, w)
+    n = m // shards
+    rows = hash_mod(jnp.arange(n, dtype=jnp.uint32), d, seed)
+    keep = sh.astype(jnp.float32) >= merged[:, -1][rows][None, :]
+    return keep.reshape(-1).astype(jnp.int32), states
+
+
+# ==================================================== DISTINCT (FIFO, Ex. 2)
+def _distinct_shard_kernel(d, w, block, nchunks, seed,
+                           x_ref, keep_ref, lo_out, hi_out, val_out,
+                           slo_ref, shi_ref, val_ref, head_ref):
+    slo_ref[...] = jnp.zeros_like(slo_ref)
+    shi_ref[...] = jnp.zeros_like(shi_ref)
+    val_ref[...] = jnp.zeros_like(val_ref)
+    head_ref[...] = jnp.zeros_like(head_ref)
+
+    def chunk(c, carry):
+        x = x_ref[pl.ds(c * block, block)]
+        rows = hash_mod(x, d, seed)
+        oh = onehot_f32(rows, d)
+        g_lo = gather_rows(oh, slo_ref[...])
+        g_hi = gather_rows(oh, shi_ref[...])
+        g_v = gather_rows(oh, val_ref[...])
+        x_lo, x_hi = split16(x)
+        hit = jnp.any((g_lo == x_lo[:, None]) & (g_hi == x_hi[:, None])
+                      & (g_v > 0.5), axis=1)
+        miss = ~hit
+        keep_ref[pl.ds(c * block, block)] = miss.astype(jnp.int32)
+        iota = jax.lax.broadcasted_iota(jnp.float32, (block, 1), 0)[:, 0]
+        big = jnp.float32(block)
+        cand = jnp.where(miss, iota, big)
+        per_row_first = jnp.min(jnp.where(oh > 0.5, cand[:, None], big),
+                                axis=0)
+        first_for_me = gather_rows(oh, per_row_first[:, None])[:, 0]
+        insert = miss & (first_for_me == iota)
+        ins_f = insert.astype(jnp.float32)
+        row_ins = jnp.max(jnp.where(oh > 0.5, ins_f[:, None], 0.0), axis=0)
+        v_lo = jnp.sum(oh * (x_lo * ins_f)[:, None], axis=0)
+        v_hi = jnp.sum(oh * (x_hi * ins_f)[:, None], axis=0)
+        head = head_ref[...]
+        wcols = jax.lax.broadcasted_iota(jnp.int32, (d, w), 1)
+        hmask = (wcols == head[:, None]) & (row_ins[:, None] > 0.5)
+        slo_ref[...] = jnp.where(hmask, v_lo[:, None], slo_ref[...])
+        shi_ref[...] = jnp.where(hmask, v_hi[:, None], shi_ref[...])
+        val_ref[...] = jnp.where(hmask, 1.0, val_ref[...])
+        head_ref[...] = jnp.where(row_ins > 0.5, (head + 1) % w, head)
+        return carry
+
+    jax.lax.fori_loop(0, nchunks, chunk, 0)
+    lo_out[...] = slo_ref[...][None]
+    hi_out[...] = shi_ref[...][None]
+    val_out[...] = val_ref[...][None]
+
+
+@partial(jax.jit, static_argnames=("d", "w", "shards", "block", "seed",
+                                   "interpret"))
+def distinct_shard_states_kernel(values: jnp.ndarray, *, d: int, w: int,
+                                 shards: int, block: int = 256,
+                                 seed: int = 0, interpret: bool = True):
+    """Pass 1: shard-local keep + per-shard (lo, hi, valid) cache states."""
+    m = values.shape[0]
+    assert m % (shards * block) == 0, "pad to a multiple of shards*block"
+    shard_len = m // shards
+    state_spec = pl.BlockSpec((1, d, w), lambda i: (i, 0, 0))
+    state_shape = jax.ShapeDtypeStruct((shards, d, w), jnp.float32)
+    return pl.pallas_call(
+        partial(_distinct_shard_kernel, d, w, block, shard_len // block,
+                seed),
+        grid=(shards,),
+        in_specs=[pl.BlockSpec((shard_len,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((shard_len,), lambda i: (i,)),
+                   state_spec, state_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
+                   state_shape, state_shape, state_shape],
+        scratch_shapes=[pltpu.VMEM((d, w), jnp.float32),
+                        pltpu.VMEM((d, w), jnp.float32),
+                        pltpu.VMEM((d, w), jnp.float32),
+                        pltpu.VMEM((d,), jnp.int32)],
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(values)
+
+
+def merge_distinct_states(lo, hi, valid):
+    """[S, d, w] shard caches -> [d, S*w] union + f32 owner codes.
+
+    Owner code per column: shard_rank + 1 where the slot is valid, else 0
+    — lets pass 2 test "cached by a lower-ranked shard" with one compare.
+    """
+    S, d, w = lo.shape
+    cat = lambda a: jnp.moveaxis(a, 0, 1).reshape(d, S * w)
+    owner = jnp.repeat(jnp.arange(S, dtype=jnp.float32) + 1.0, w)
+    owner = jnp.where(cat(valid) > 0.5, owner[None, :], 0.0)
+    return cat(lo), cat(hi), owner
+
+
+def _distinct_apply_kernel(d, block, seed, bpshard,
+                           x_ref, keep1_ref, mlo_ref, mhi_ref, own_ref,
+                           keep_ref):
+    x = x_ref[...]
+    shard = (pl.program_id(0) // bpshard).astype(jnp.float32)
+    rows = hash_mod(x, d, seed)
+    oh = onehot_f32(rows, d)
+    g_lo = gather_rows(oh, mlo_ref[...])
+    g_hi = gather_rows(oh, mhi_ref[...])
+    g_own = gather_rows(oh, own_ref[...])
+    x_lo, x_hi = split16(x)
+    dup_lower = jnp.any((g_lo == x_lo[:, None]) & (g_hi == x_hi[:, None])
+                        & (g_own > 0.5) & (g_own < shard + 0.5), axis=1)
+    keep_ref[...] = ((keep1_ref[...] > 0) & ~dup_lower).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("d", "shards", "block", "seed",
+                                   "interpret"))
+def distinct_apply_kernel(values, keep1, mlo, mhi, owner, *, d: int,
+                          shards: int, block: int = 256, seed: int = 0,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Pass 2: drop shard-kept entries cached by a lower-ranked shard."""
+    m = values.shape[0]
+    Sw = mlo.shape[1]
+    bpshard = m // shards // block
+    full = lambda a, b: pl.BlockSpec((a, b), lambda i: (0, 0))
+    return pl.pallas_call(
+        partial(_distinct_apply_kernel, d, block, seed, bpshard),
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  full(d, Sw), full(d, Sw), full(d, Sw)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(values, keep1, mlo, mhi, owner)
+
+
+def distinct_parallel_ref(values, *, d, w, shards, block, seed=0):
+    """jnp mirror: vmapped FIFO block oracle + the shared cache-union
+    merge (same owner-code convention as the apply kernel), applied on
+    the exact uint32 fingerprints instead of split16 halves."""
+    m = values.shape[0]
+    sh = values.reshape(shards, m // shards)
+    keep1, (slots, valid, _) = jax.vmap(lambda v: ref.distinct_block_ref(
+        v, d=d, w=w, block=block, seed=seed, return_state=True))(sh)
+    lo, hi = split16(slots)
+    _, _, owner = merge_distinct_states(lo, hi, valid.astype(jnp.float32))
+    mslots = jnp.moveaxis(slots, 0, 1).reshape(d, shards * w)
+    rows = hash_mod(sh, d, seed)
+    g = mslots[rows]       # [S, n, S*w]
+    g_own = owner[rows]
+    sidx = jnp.arange(shards, dtype=jnp.float32)[:, None, None]
+    dup_lower = jnp.any((g == sh[..., None]) & (g_own > 0.5)
+                        & (g_own < sidx + 0.5), axis=-1)
+    keep = keep1.reshape(shards, -1).astype(bool) & ~dup_lower
+    return keep.reshape(-1).astype(jnp.int32), (slots, valid)
+
+
+# ===================================================== SKYLINE (Ex. 6)
+def _skyline_shard_kernel(w, D, mode, block, nchunks,
+                          x_ref, keep_ref, p_out, s_out, p_ref, s_ref):
+    from .skyline_prune import _score
+
+    p_ref[...] = jnp.zeros_like(p_ref)
+    s_ref[...] = jnp.full_like(s_ref, NEG)
+
+    def chunk(c, carry):
+        x = x_ref[pl.ds(c * block, block)]
+        B = x.shape[0]
+        P, S = p_ref[...], s_ref[...]
+        dom = (jnp.all(x[:, None, :] <= P[None], axis=-1)
+               & jnp.any(x[:, None, :] < P[None], axis=-1)
+               & (S > NEG)[None, :])
+        keep_ref[pl.ds(c * block, block)] = \
+            (~jnp.any(dom, axis=1)).astype(jnp.int32)
+        hx = _score(x, mode)
+        idxw = jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0)[:, 0]
+        for _ in range(w):
+            best = jnp.max(hx)
+            sel = (hx == best)
+            iota = jax.lax.broadcasted_iota(jnp.float32, (B, 1), 0)[:, 0]
+            first = jnp.min(jnp.where(sel, iota, jnp.float32(B)))
+            pick = sel & (iota == first)
+            bx = jnp.sum(jnp.where(pick[:, None], x, 0.0), axis=0)
+            do = best > S[-1]
+            pos = jnp.sum(best <= S)
+            rolledP = jnp.concatenate([P[:1], P[:-1]], axis=0)
+            rolledS = jnp.concatenate([S[:1], S[:-1]], axis=0)
+            P2 = jnp.where((idxw == pos)[:, None], bx[None, :],
+                           jnp.where((idxw > pos)[:, None], rolledP, P))
+            S2 = jnp.where(idxw == pos, best,
+                           jnp.where(idxw > pos, rolledS, S))
+            P = jnp.where(do, P2, P)
+            S = jnp.where(do, S2, S)
+            hx = jnp.where(pick, NEG, hx)
+        p_ref[...] = P
+        s_ref[...] = S
+        return carry
+
+    jax.lax.fori_loop(0, nchunks, chunk, 0)
+    p_out[...] = p_ref[...][None]
+    s_out[...] = s_ref[...][None]
+
+
+@partial(jax.jit, static_argnames=("w", "shards", "block", "score",
+                                   "interpret"))
+def skyline_shard_states_kernel(points: jnp.ndarray, *, w: int, shards: int,
+                                block: int = 256, score: str = "aph",
+                                interpret: bool = True):
+    """Pass 1: shard-local keep + per-shard (points, scores) stores."""
+    m, D = points.shape
+    assert m % (shards * block) == 0, "pad to a multiple of shards*block"
+    shard_len = m // shards
+    return pl.pallas_call(
+        partial(_skyline_shard_kernel, w, D, score, block,
+                shard_len // block),
+        grid=(shards,),
+        in_specs=[pl.BlockSpec((shard_len, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((shard_len,), lambda i: (i,)),
+                   pl.BlockSpec((1, w, D), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, w), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
+                   jax.ShapeDtypeStruct((shards, w, D), jnp.float32),
+                   jax.ShapeDtypeStruct((shards, w), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((w, D), jnp.float32),
+                        pltpu.VMEM((w,), jnp.float32)],
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(points.astype(jnp.float32))
+
+
+def merge_skyline_states(points, scores):
+    """[S, w, D]+[S, w] shard stores -> [S*w, D]+[S*w] dominance set."""
+    S, w, D = points.shape
+    return points.reshape(S * w, D), scores.reshape(S * w)
+
+
+def _skyline_apply_kernel(x_ref, p_ref, s_ref, keep_ref):
+    x = x_ref[...]
+    P, S = p_ref[...], s_ref[...]
+    dom = (jnp.all(x[:, None, :] <= P[None], axis=-1)
+           & jnp.any(x[:, None, :] < P[None], axis=-1)
+           & (S > NEG)[None, :])
+    keep_ref[...] = (~jnp.any(dom, axis=1)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def skyline_apply_kernel(points, mpoints, mscores, *, block: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Pass 2: keep a point iff no merged stored point dominates it."""
+    m, D = points.shape
+    Sw = mpoints.shape[0]
+    return pl.pallas_call(
+        _skyline_apply_kernel,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block, D), lambda i: (i, 0)),
+                  pl.BlockSpec((Sw, D), lambda i: (0, 0)),
+                  pl.BlockSpec((Sw,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(points.astype(jnp.float32), mpoints, mscores)
+
+
+def skyline_parallel_ref(points, *, w, shards, block, score="aph"):
+    """jnp mirror: vmapped block oracle + dominance-set apply."""
+    m, D = points.shape
+    sh = points.reshape(shards, m // shards, D).astype(jnp.float32)
+    _, (P, S) = jax.vmap(lambda p: ref.skyline_block_ref(
+        p, w=w, block=block, score=score, return_state=True))(sh)
+    mp, ms = merge_skyline_states(P, S)
+    dom = (jnp.all(sh[:, :, None, :] <= mp[None, None], axis=-1)
+           & jnp.any(sh[:, :, None, :] < mp[None, None], axis=-1)
+           & (ms > NEG)[None, None, :])
+    keep = ~jnp.any(dom, axis=-1)
+    return keep.reshape(-1).astype(jnp.int32), (P, S)

@@ -17,10 +17,11 @@ from .common import NEG, hash_mod
 
 
 # ------------------------------------------------------------- DISTINCT
-@partial(jax.jit, static_argnames=("d", "w", "block", "seed"))
+@partial(jax.jit, static_argnames=("d", "w", "block", "seed", "return_state"))
 def distinct_block_ref(values: jnp.ndarray, *, d: int, w: int, block: int,
-                       seed: int = 0) -> jnp.ndarray:
-    """FIFO d×w cache with block semantics. Returns keep mask int32[m]."""
+                       seed: int = 0, return_state: bool = False):
+    """FIFO d×w cache with block semantics. Returns keep mask int32[m]
+    (plus the final (slots, valid, head) state when return_state)."""
     m = values.shape[0]
     nb = m // block
     vals = values[: nb * block].reshape(nb, block)
@@ -49,15 +50,17 @@ def distinct_block_ref(values: jnp.ndarray, *, d: int, w: int, block: int,
 
     init = (jnp.zeros((d, w), jnp.uint32), jnp.zeros((d, w), jnp.bool_),
             jnp.zeros((d,), jnp.int32))
-    _, keep = jax.lax.scan(step, init, vals)
-    return keep.reshape(-1).astype(jnp.int32)
+    state, keep = jax.lax.scan(step, init, vals)
+    keep = keep.reshape(-1).astype(jnp.int32)
+    return (keep, state) if return_state else keep
 
 
 # ---------------------------------------------------------------- TOP-N
-@partial(jax.jit, static_argnames=("d", "w", "block", "seed"))
+@partial(jax.jit, static_argnames=("d", "w", "block", "seed", "return_state"))
 def topn_block_ref(values: jnp.ndarray, *, d: int, w: int, block: int,
-                   seed: int = 0) -> jnp.ndarray:
-    """Randomized TOP-N matrix, block semantics. keep mask int32[m]."""
+                   seed: int = 0, return_state: bool = False):
+    """Randomized TOP-N matrix, block semantics. keep mask int32[m]
+    (plus the final f32[d, w] matrix when return_state)."""
     m = values.shape[0]
     nb = m // block
     vals = values[: nb * block].reshape(nb, block).astype(jnp.float32)
@@ -80,8 +83,9 @@ def topn_block_ref(values: jnp.ndarray, *, d: int, w: int, block: int,
 
     gidx = jnp.arange(nb * block).reshape(nb, block)
     init = jnp.full((d, w), NEG, jnp.float32)
-    _, keep = jax.lax.scan(step, init, (vals, gidx))
-    return keep.reshape(-1).astype(jnp.int32)
+    state, keep = jax.lax.scan(step, init, (vals, gidx))
+    keep = keep.reshape(-1).astype(jnp.int32)
+    return (keep, state) if return_state else keep
 
 
 # ------------------------------------------------------------ Count-Min
@@ -129,9 +133,9 @@ def bloom_query_ref(bits: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int,
 
 
 # -------------------------------------------------------------- SKYLINE
-@partial(jax.jit, static_argnames=("w", "block", "score"))
+@partial(jax.jit, static_argnames=("w", "block", "score", "return_state"))
 def skyline_block_ref(points: jnp.ndarray, *, w: int, block: int,
-                      score: str = "aph") -> jnp.ndarray:
+                      score: str = "aph", return_state: bool = False):
     """w-point store, block semantics: keep vs pre-block state; insert the
     top-w block candidates by score. keep mask int32[m]."""
     from repro.core.skyline import _SCORES
@@ -167,5 +171,6 @@ def skyline_block_ref(points: jnp.ndarray, *, w: int, block: int,
         return (P, S), keep
 
     init = (jnp.zeros((w, D), jnp.float32), jnp.full((w,), NEG, jnp.float32))
-    _, keep = jax.lax.scan(step, init, pts)
-    return keep.reshape(-1).astype(jnp.int32)
+    state, keep = jax.lax.scan(step, init, pts)
+    keep = keep.reshape(-1).astype(jnp.int32)
+    return (keep, state) if return_state else keep

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import NEG
+from .common import compiler_params, NEG
 
 
 def _score(x, mode):
@@ -80,7 +80,6 @@ def skyline_prune_kernel(points: jnp.ndarray, *, w: int, block: int = 256,
         out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((w, D), jnp.float32),
                         pltpu.VMEM((w,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=compiler_params(("arbitrary",)),
         interpret=interpret,
     )(points.astype(jnp.float32))

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import NEG, gather_rows, hash_mod, onehot_f32
+from .common import compiler_params, NEG, gather_rows, hash_mod, onehot_f32
 
 
 def _kernel(d, w, block, seed, x_ref, keep_ref, s_ref):
@@ -60,7 +60,6 @@ def topn_prune_kernel(values: jnp.ndarray, *, d: int, w: int,
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
         scratch_shapes=[pltpu.VMEM((d, w), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=compiler_params(("arbitrary",)),
         interpret=interpret,
     )(values.astype(jnp.float32))

@@ -286,6 +286,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_trace - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: per-computation
+                cost = cost[0] if cost else None
             hlo = compiled.as_text()
             coll = hlo_collectives(hlo)
         result.update(

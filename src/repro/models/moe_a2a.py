@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 from .common import ACTIVATIONS, constrain, dense
@@ -179,11 +181,10 @@ def apply_moe_a2a(p, x, rules, cfg, int8_dispatch: bool = False):
     seq_spec = seq_axes if len(seq_axes) != 1 else seq_axes[0]
     dp_spec = P(dp, seq_spec, None)
     ep_spec = P(ep if len(ep) > 1 else ep[0])
-    y, aux = jax.shard_map(
-        body, mesh=rules.mesh,
+    y, aux = compat.shard_map(
+        body, rules.mesh,
         in_specs=(dp_spec, P(), ep_spec, ep_spec, ep_spec),
         out_specs=(dp_spec, P()),
-        check_vma=False,
     )(x, p["router"].astype(jnp.float32), p["wi_gate"], p["wi_up"], p["wo_e"])
 
     if m.shared_experts:

@@ -21,8 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import core
+from repro import compat, core
 from .tables import Table
+
+
+# replication checking stays off: workers return per-shard masks, not
+# replicated values
+_shard_map = compat.shard_map
 
 
 @dataclasses.dataclass
@@ -46,10 +51,9 @@ def _shard_call(mesh, axis, fn, *arrays):
     """
     if mesh is None:
         return jax.tree.map(lambda y: y[None], fn(*[a[0] for a in arrays]))
-    sm = jax.shard_map(
+    sm = _shard_map(
         lambda *xs: jax.tree.map(lambda y: y[None], fn(*[x[0] for x in xs])),
-        mesh=mesh, in_specs=P(axis), out_specs=P(axis),
-                       check_vma=False)
+        mesh, P(axis), P(axis))
     return sm(*arrays)
 
 
@@ -153,8 +157,7 @@ def _having_distributed(mesh, axis, keys_st, vals_st, p):
     if mesh is None:
         return worker(keys_st[:1] if keys_st.ndim > 1 else keys_st[None],
                       vals_st[:1] if vals_st.ndim > 1 else vals_st[None])[0]
-    sm = jax.shard_map(worker, mesh=mesh, in_specs=P(axis), out_specs=P(axis),
-                       check_vma=False)
+    sm = _shard_map(worker, mesh, P(axis), P(axis))
     return sm(keys_st, vals_st).reshape(-1)
 
 
@@ -182,8 +185,7 @@ def _run_join(spec, tables, mesh, axis, p):
         keep_a, keep_b = worker(ka_st[:1], kb_st[:1])
         keep_a, keep_b = keep_a[0], keep_b[0]
     else:
-        sm = jax.shard_map(worker, mesh=mesh, in_specs=P(axis),
-                           out_specs=P(axis), check_vma=False)
+        sm = _shard_map(worker, mesh, P(axis), P(axis))
         keep_a, keep_b = sm(ka_st, kb_st)
         keep_a, keep_b = keep_a.reshape(-1), keep_b.reshape(-1)
     na, nb = keep_a.shape[0], keep_b.shape[0]
@@ -199,8 +201,7 @@ def _gather_keep(mesh, axis, fn, stacked, total):
     if mesh is None:
         flat = stacked.reshape(-1, *stacked.shape[2:])
         return fn(flat[:total])
-    sm = jax.shard_map(lambda x: fn(x[0])[None], mesh=mesh,
-                       in_specs=P(axis), out_specs=P(axis), check_vma=False)
+    sm = _shard_map(lambda x: fn(x[0])[None], mesh, P(axis), P(axis))
     return sm(stacked).reshape(-1)
 
 

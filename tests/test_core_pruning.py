@@ -3,7 +3,7 @@ superset safety (the §7.2 reliability-protocol invariant) via hypothesis."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypstub import given, settings, st
 
 from repro import core
 
@@ -204,3 +204,31 @@ def test_filter_relax_is_implied(ta, tb):
     full = core.evaluate(f, cols)
     relaxed = core.evaluate(core.relax(f), cols)
     assert bool(jnp.all(relaxed | ~full))
+
+
+# --------------------------------------------------------------- COMPACT
+@pytest.mark.parametrize("shape", [(301,), (301, 4)])
+def test_compact_cumsum_matches_argsort(rng, shape):
+    """The O(m) scatter compact must byte-match the sort-based one."""
+    v = jnp.asarray(rng.integers(0, 999, shape).astype(np.int32))
+    keep = jnp.asarray(rng.random(shape[0]) < 0.35)
+    a, ca = core.compact(v, keep, fill=-7)
+    b, cb = core.compact_argsort(v, keep, fill=-7)
+    assert int(ca) == int(cb) == int(keep.sum())
+    assert bool(jnp.all(a == b))
+
+
+def test_compact_preserves_stable_order(rng):
+    v = jnp.arange(50, dtype=jnp.int32)
+    keep = jnp.asarray(rng.random(50) < 0.5)
+    out, count = core.compact(v, keep)
+    kept = np.asarray(v)[np.asarray(keep)]
+    np.testing.assert_array_equal(np.asarray(out)[: int(count)], kept)
+
+
+def test_compact_all_and_none():
+    v = jnp.arange(8, dtype=jnp.int32) + 1
+    out, count = core.compact(v, jnp.ones(8, bool))
+    assert int(count) == 8 and bool(jnp.all(out == v))
+    out, count = core.compact(v, jnp.zeros(8, bool), fill=0)
+    assert int(count) == 0 and bool(jnp.all(out == 0))

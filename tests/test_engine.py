@@ -1,0 +1,213 @@
+"""Sharded pruning engine: superset safety of the parallel modes.
+
+The load-bearing property (paper §3 + §7.2): every mode's keep mask
+contains the minimal correct survivor set — the true top-N / first
+occurrences / skyline / every entry of qualifying keys — so master
+completion over the survivors reproduces Q(D) exactly, and (§7.2) so
+does completion over ANY superset of them. The parallel modes are NOT
+mask-supersets of the sequential scan (a shard that warms up on large
+values advances its ladder faster than the global scan), which is why
+these tests compare against the oracle answer / OPT, with the scan mode
+asserted equal to the direct sequential pruner.
+
+Written hypothesis-free (parametrized seeds) so they run in containers
+without hypothesis installed.
+"""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core import engine_prune, merge_states
+
+MODES = ("sharded", "two_pass")
+SHARDS = (2, 5)  # 5 does not divide the stream lengths → padding path
+
+
+# ----------------------------------------------------------------- TOP-N
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_topn_det_engine_exact(mode, shards, seed):
+    rs = np.random.default_rng(seed)
+    m, N = 3001, 25
+    v = jnp.asarray((rs.random(m) * 1e5 + 1).astype(np.float32))
+    r = engine_prune("topn_det", v, mode=mode, shards=shards, N=N, w=6)
+    topv, _ = core.master_complete_topn(v, r.keep, N)
+    np.testing.assert_allclose(np.sort(np.asarray(topv)),
+                               np.sort(np.asarray(v))[-N:])
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_topn_rand_engine_exact(mode, shards, seed):
+    rs = np.random.default_rng(seed)
+    m, N = 4000, 16
+    v = jnp.asarray(rs.permutation(m).astype(np.float32) + 1)
+    r = engine_prune("topn_rand", v, mode=mode, shards=shards, d=64, w=8,
+                     seed=seed)
+    topv, _ = core.master_complete_topn(v, r.keep, N)
+    np.testing.assert_allclose(np.sort(np.asarray(topv)),
+                               np.sort(np.asarray(v))[-N:])
+
+
+def test_topn_rand_merge_is_rowwise_topw_union():
+    rs = np.random.default_rng(7)
+    v = jnp.asarray(rs.permutation(4096).astype(np.float32) + 1)
+    d, w, S = 32, 4, 4
+    sh = v.reshape(S, -1)
+    r1 = jax.vmap(lambda x: core.topn_rand_prune(x, d=d, w=w))(sh)
+    merged = merge_states("topn_rand", r1.state, d=d, w=w)
+    allv = np.moveaxis(np.asarray(r1.state.vals), 0, 1).reshape(d, S * w)
+    want = -np.sort(-allv, axis=1)[:, :w]
+    np.testing.assert_allclose(np.asarray(merged.vals), want)
+
+
+# --------------------------------------------------------------- DISTINCT
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("policy", ["lru", "fifo"])
+def test_distinct_engine_no_value_lost(mode, shards, policy):
+    rs = np.random.default_rng(3)
+    vals = jnp.asarray(rs.integers(1, 250, 2999).astype(np.uint32))
+    r = engine_prune("distinct", vals, mode=mode, shards=shards, d=32, w=4,
+                     policy=policy)
+    got = core.master_complete_distinct(vals, r.keep)
+    out = set(np.asarray(vals)[np.asarray(got)].tolist())
+    assert out == set(np.asarray(vals).tolist())
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_distinct_engine_keeps_first_occurrences(mode):
+    rs = np.random.default_rng(4)
+    vals = jnp.asarray(rs.integers(1, 100, 1500).astype(np.uint32))
+    r = engine_prune("distinct", vals, mode=mode, shards=4, d=16, w=2)
+    opt = core.opt_keep_distinct(vals)
+    assert bool(jnp.all(r.keep | ~opt)), "pruned a true first occurrence"
+
+
+def test_distinct_two_pass_subset_of_sharded():
+    """Pass 2 only removes cross-shard duplicates: strictly tighter."""
+    rs = np.random.default_rng(5)
+    vals = jnp.asarray(rs.integers(1, 300, 4000).astype(np.uint32))
+    ks = engine_prune("distinct", vals, mode="sharded", shards=4,
+                      d=32, w=4).keep
+    kt = engine_prune("distinct", vals, mode="two_pass", shards=4,
+                      d=32, w=4).keep
+    assert bool(jnp.all(ks | ~kt))
+    assert int(kt.sum()) < int(ks.sum())  # duplicates exist at this scale
+
+
+# ---------------------------------------------------------------- SKYLINE
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("score", ["aph", "sum"])
+def test_skyline_engine_exact(mode, shards, score):
+    rs = np.random.default_rng(6)
+    pts = jnp.asarray(rs.integers(1, 400, (1501, 3)).astype(np.float32))
+    r = engine_prune("skyline", pts, mode=mode, shards=shards, w=8,
+                     score=score)
+    sky = core.skyline_oracle(pts)
+    assert bool(jnp.all(r.keep | ~sky)), "pruned a true skyline point"
+    got = core.master_complete_skyline(pts, r.keep)
+    assert bool(jnp.all(got == sky))
+
+
+# ---------------------------------------------------------------- GROUPBY
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("agg", ["sum", "min", "max"])
+def test_groupby_engine_exact(mode, shards, agg):
+    rs = np.random.default_rng(8)
+    keys = jnp.asarray(rs.integers(0, 40, 2998).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 50, 2998).astype(np.int32))
+    r = engine_prune("groupby", keys, vals, mode=mode, shards=shards,
+                     d=16, w=4, agg=agg)
+    got = core.master_complete_groupby(r, agg)
+    want = core.groupby_oracle(keys, vals, agg)
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-2 * max(1, abs(want[k]))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_groupby_pad_eviction_reaches_master(mode):
+    """A tail pad can evict a REAL partial from the cache; its emission
+    sits past position m in the padded stream and must not be sliced
+    off (regression: key 5's sum vanished with a [:m] cut)."""
+    keys = jnp.asarray(np.arange(7, dtype=np.uint32))
+    vals = jnp.asarray((np.arange(7, dtype=np.int32) + 1) * 10)
+    r = engine_prune("groupby", keys, vals, mode=mode, shards=2,
+                     d=1, w=2, agg="sum")
+    assert core.master_complete_groupby(r, "sum") \
+        == core.groupby_oracle(keys, vals, "sum")
+
+
+def test_groupby_count_needs_divisible_stream():
+    keys = jnp.asarray(np.arange(10, dtype=np.uint32))
+    vals = jnp.asarray(np.ones(10, np.int32))
+    with pytest.raises(ValueError, match="pad identity"):
+        engine_prune("groupby", keys, vals, mode="sharded", shards=3,
+                     d=4, w=2, agg="count")
+    r = engine_prune("groupby", keys, vals, mode="two_pass", shards=2,
+                     d=4, w=2, agg="count")
+    got = core.master_complete_groupby(r, "count")
+    assert got == core.groupby_oracle(keys, vals, "count")
+
+
+# ----------------------------------------------------------------- HAVING
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", SHARDS)
+def test_having_engine_exact(mode, shards):
+    rs = np.random.default_rng(9)
+    keys = jnp.asarray(rs.integers(0, 50, 3001).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 9, 3001).astype(np.int32))
+    thr = 150
+    r = engine_prune("having", keys, vals, mode=mode, shards=shards,
+                     threshold=thr, rows=3, width=256)
+    assert core.master_complete_having(keys, vals, r.keep, thr) \
+        == core.having_oracle(keys, vals, thr)
+
+
+def test_having_two_pass_merge_matches_sequential_sketch():
+    """CMS build is order-independent, so sketch addition is exact."""
+    rs = np.random.default_rng(10)
+    keys = jnp.asarray(rs.integers(0, 30, 2048).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 5, 2048).astype(np.int32))
+    seq = engine_prune("having", keys, vals, mode="scan", threshold=99,
+                       rows=2, width=128)
+    par = engine_prune("having", keys, vals, mode="two_pass", shards=4,
+                       threshold=99, rows=2, width=128)
+    np.testing.assert_allclose(np.asarray(par.state.table),
+                               np.asarray(seq.state.table))
+    assert bool(jnp.all(par.keep == seq.keep))
+
+
+# ------------------------------------------------------------------ engine
+def test_scan_mode_equals_direct_pruner():
+    rs = np.random.default_rng(11)
+    v = jnp.asarray((rs.random(500) * 100 + 1).astype(np.float32))
+    a = engine_prune("topn_det", v, mode="scan", N=10, w=5)
+    b = core.topn_det_prune(v, N=10, w=5)
+    assert bool(jnp.all(a.keep == b.keep))
+
+
+def test_engine_rejects_bad_mode_and_algo():
+    v = jnp.ones(16, jnp.float32)
+    with pytest.raises(ValueError, match="mode"):
+        engine_prune("topn_det", v, mode="warp", N=2)
+    with pytest.raises(KeyError):
+        engine_prune("no_such_algo", v, mode="scan")
+    with pytest.raises(ValueError, match="exceeds"):
+        engine_prune("topn_det", v, mode="sharded", shards=64, N=2)
+
+
+def test_engine_is_jittable():
+    rs = np.random.default_rng(12)
+    v = jnp.asarray((rs.random(1024) * 100 + 1).astype(np.float32))
+    fn = jax.jit(lambda x: engine_prune("topn_det", x, mode="two_pass",
+                                        shards=4, N=8, w=5).keep)
+    assert bool(jnp.all(fn(v) == engine_prune(
+        "topn_det", v, mode="two_pass", shards=4, N=8, w=5).keep))

@@ -20,8 +20,12 @@ def test_jaxpr_flops_scan_trip_count():
         return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=10)[0]
     x = jnp.zeros((128, 128))
     assert jaxpr_flops(f, x) == 10 * 2 * 128 ** 3
-    # cross-check the undercount we corrected for
-    hlo_flops = jax.jit(f).lower(x).compile().cost_analysis()["flops"]
+    # cross-check the undercount we corrected for (cost_analysis returns
+    # a per-computation list on older jax, a flat dict on newer)
+    ca = jax.jit(f).lower(x).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    hlo_flops = ca["flops"]
     assert hlo_flops < jaxpr_flops(f, x) / 5
 
 

@@ -1,9 +1,10 @@
 """Pallas kernels vs pure-jnp oracles: exact equality across shape/dtype
 sweeps (interpret mode executes kernel bodies on CPU) + property tests."""
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypstub import given, settings, st
 
 from repro.core import opt_keep_distinct, skyline_oracle
 from repro.kernels import ops, ref
@@ -100,6 +101,82 @@ def test_skyline_kernel_matches_ref(rng, w, D, score):
 def test_skyline_kernel_never_prunes_skyline(rng):
     pts = jnp.asarray(rng.integers(1, 500, (1024, 2)).astype(np.float32))
     keep = ops.skyline_prune(pts, w=8, block=128)
+    assert bool(jnp.all(keep | ~skyline_oracle(pts)))
+
+
+# ------------------------------------------- grid-parallel (two-pass) kernels
+@pytest.mark.parametrize("shards,block,m", [(2, 128, 2048), (4, 256, 4096),
+                                            (4, 128, 3000)])  # 3000: padding
+def test_topn_parallel_kernel_matches_ref(rng, shards, block, m):
+    v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1)
+    k = ops.topn_prune_parallel(v, d=128, w=8, shards=shards, block=block)
+    r = ops.topn_prune_parallel(v, d=128, w=8, shards=shards, block=block,
+                                use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_topn_parallel_keeps_true_topn(rng):
+    v = jnp.asarray(rng.permutation(4096).astype(np.float32) + 1)
+    keep = np.asarray(ops.topn_prune_parallel(v, d=128, w=8, shards=4,
+                                              block=256))
+    top = np.argsort(np.asarray(v))[-64:]
+    assert keep[top].all(), "a true top-N entry was pruned"
+
+
+@pytest.mark.parametrize("shards,block", [(2, 128), (4, 128)])
+def test_distinct_parallel_kernel_matches_ref(rng, shards, block):
+    vals = jnp.asarray(rng.integers(1, 400, 4096).astype(np.uint32))
+    k = ops.distinct_prune_parallel(vals, d=64, w=4, shards=shards,
+                                    block=block)
+    r = ops.distinct_prune_parallel(vals, d=64, w=4, shards=shards,
+                                    block=block, use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_distinct_parallel_no_false_positive(rng):
+    vals = jnp.asarray(rng.integers(1, 300, 4096).astype(np.uint32))
+    keep = ops.distinct_prune_parallel(vals, d=64, w=4, shards=4, block=128)
+    assert bool(jnp.all(keep | ~opt_keep_distinct(vals)))
+
+
+def test_distinct_parallel_tighter_than_shard_local(rng):
+    """The cache-union pass 2 prunes cross-shard duplicates that
+    independent shard caches cannot see."""
+    vals = jnp.asarray(rng.integers(1, 200, 4096).astype(np.uint32))
+    from repro.kernels import parallel
+    keep2, _ = parallel.distinct_parallel_ref(vals, d=64, w=4, shards=4,
+                                              block=128)
+    keep1 = jax.vmap(lambda v: ref.distinct_block_ref(
+        v, d=64, w=4, block=128))(vals.reshape(4, -1)).reshape(-1)
+    assert bool(jnp.all(keep1 | ~keep2))   # keep2 ⊆ keep1
+    assert int(keep2.sum()) < int(keep1.sum())
+
+
+@pytest.mark.parametrize("shards,score", [(2, "aph"), (4, "sum")])
+def test_skyline_parallel_kernel_matches_ref(rng, shards, score):
+    pts = jnp.asarray(rng.integers(1, 999, (2048, 3)).astype(np.float32))
+    k = ops.skyline_prune_parallel(pts, w=8, shards=shards, block=128,
+                                   score=score)
+    r = ops.skyline_prune_parallel(pts, w=8, shards=shards, block=128,
+                                   score=score, use_ref=True)
+    assert bool(jnp.all(k == r))
+
+
+def test_skyline_parallel_never_prunes_skyline(rng):
+    pts = jnp.asarray(rng.integers(1, 500, (1024, 2)).astype(np.float32))
+    keep = ops.skyline_prune_parallel(pts, w=8, shards=4, block=128)
+    assert bool(jnp.all(keep | ~skyline_oracle(pts)))
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (ops.skyline_prune, dict(w=8, block=128)),
+    (ops.skyline_prune_parallel, dict(w=8, shards=4, block=128)),
+])
+def test_skyline_pad_safe_for_negative_data(rng, fn, kw):
+    """Regression: 0.0 pads dominated all-negative points, pruning the
+    true skyline. Pads must be NEG so they dominate nothing."""
+    pts = jnp.asarray(-rng.integers(1, 500, (1000, 2)).astype(np.float32))
+    keep = fn(pts, **kw)  # 1000 forces padding in both variants
     assert bool(jnp.all(keep | ~skyline_oracle(pts)))
 
 

@@ -2,10 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypstub import given, settings, st
 
 from repro.core import (ResourceFootprint, SwitchProfile, footprint,
-                        pack_queries, rule_count)
+                        optimal_shards, pack_queries, plan_multi_switch,
+                        rule_count)
 
 
 def test_table2_formulas():
@@ -70,3 +71,44 @@ def test_packing_never_oversubscribes(stages, alus):
             for s in range(s0, s0 + fp.stages):
                 alu_used[s] += per
         assert all(u <= prof.alus_per_stage for u in alu_used)
+
+
+# ------------------------------------------------- multi-switch placement
+def test_multi_switch_speedup_and_merge_cost():
+    q = {"topn": footprint("topn_rand", d=1024, w=8),
+         "distinct": footprint("distinct_fifo", d=1024, w=4)}
+    m = 1 << 20
+    p1 = plan_multi_switch(q, m, shards=1)
+    p8 = plan_multi_switch(q, m, shards=8)
+    assert p1.feasible and p8.feasible
+    assert p8.entries_per_switch == m // 8
+    state = sum(fp.sram_bytes for fp in q.values())
+    assert p8.merge_bytes == 8 * state
+    assert p8.est_speedup > p1.est_speedup > 0.9
+
+
+def test_multi_switch_diminishing_returns():
+    """Past the optimum, the master's merge fold eats the speedup."""
+    q = {"gb": footprint("groupby", d=4096, w=8)}
+    m = 1 << 16
+    best = optimal_shards(m, sum(fp.sram_bytes for fp in q.values()))
+    lo = plan_multi_switch(q, m, shards=max(best // 4, 1))
+    opt = plan_multi_switch(q, m, shards=best)
+    hi = plan_multi_switch(q, m, shards=best * 16)
+    assert opt.est_speedup >= lo.est_speedup
+    assert opt.est_speedup >= hi.est_speedup
+
+
+def test_multi_switch_infeasible_propagates():
+    prof = SwitchProfile(stages=4, alus_per_stage=2,
+                         sram_per_stage_bytes=1 << 10)
+    plan = plan_multi_switch({"sky": footprint("skyline_aph", D=2, w=10)},
+                             1 << 20, shards=4, profile=prof)
+    assert not plan.feasible and "sky" in plan.reason
+
+
+def test_optimal_shards_scaling():
+    # bigger streams or smaller states → more useful switches
+    assert optimal_shards(1 << 24, 1 << 16) > optimal_shards(1 << 18, 1 << 16)
+    assert optimal_shards(1 << 20, 1 << 10) > optimal_shards(1 << 20, 1 << 20)
+    assert optimal_shards(1 << 20, 0) == 4096  # stateless: no merge cost

@@ -2,7 +2,7 @@
 deliveries of pruned packets never change query output (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypstub import given, settings, st
 
 from repro import core
 from repro.query import SwitchReliability, simulate_lossy_stream

@@ -1,10 +1,12 @@
 """The paper's central invariant, property-tested across algorithms:
 for ANY S with A_Q(D) ⊆ S ⊆ D, Q(S) == Q(D) (§3 definition + §7.2
 retransmission tolerance). DISTINCT's version lives in
-test_core_pruning; these cover TOP-N, JOIN, HAVING and SKYLINE."""
+test_core_pruning; these cover TOP-N, JOIN, HAVING and SKYLINE, plus
+the sharded engine's parallel modes (sharded / two_pass)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+from hypstub import given, settings, st
 
 from repro import core
 
@@ -65,3 +67,70 @@ def test_skyline_superset_safety(D, seed):
     a = core.master_complete_skyline(pts, jnp.asarray(keep))
     b = core.master_complete_skyline(pts, s)
     assert bool(jnp.all(a == b)) and bool(jnp.all(a == core.skyline_oracle(pts)))
+
+
+# --------------------------------------------------- sharded engine modes
+# The §7.2 invariant extended to the parallel engine: the keep mask of
+# every execution mode — and any random superset of it (retransmission /
+# duplicate delivery) — completes to the exact sequential answer.
+# Parametrized (not hypothesis) so they run without hypothesis installed.
+
+@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engine_topn_superset_safety(mode, seed):
+    rs = np.random.default_rng(seed)
+    m, N = 1999, 12
+    v = jnp.asarray((rs.random(m) * 1e4 + 1).astype(np.float32))
+    keep = np.asarray(core.engine_prune("topn_rand", v, mode=mode, shards=4,
+                                        d=32, w=8, seed=seed).keep)
+    s = _superset(keep, seed + 1)
+    a, _ = core.master_complete_topn(v, jnp.asarray(keep), N)
+    b, _ = core.master_complete_topn(v, s, N)
+    np.testing.assert_allclose(np.sort(np.asarray(a)), np.sort(np.asarray(b)))
+    np.testing.assert_allclose(np.sort(np.asarray(a)),
+                               np.sort(np.asarray(v))[-N:])
+
+
+@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engine_distinct_superset_safety(mode, seed):
+    rs = np.random.default_rng(seed)
+    vals = jnp.asarray(rs.integers(1, 120, 1500).astype(np.uint32))
+    keep = np.asarray(core.engine_prune("distinct", vals, mode=mode,
+                                        shards=4, d=16, w=2).keep)
+    s = _superset(keep, seed + 1)
+    got = core.master_complete_distinct(vals, s)
+    out = set(np.asarray(vals)[np.asarray(got)].tolist())
+    assert out == set(np.asarray(vals).tolist())
+
+
+@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_skyline_superset_safety(mode, seed):
+    rs = np.random.default_rng(seed)
+    pts = jnp.asarray(rs.integers(1, 200, (800, 3)).astype(np.float32))
+    keep = np.asarray(core.engine_prune("skyline", pts, mode=mode, shards=4,
+                                        w=6).keep)
+    s = _superset(keep, seed + 1)
+    a = core.master_complete_skyline(pts, jnp.asarray(keep))
+    b = core.master_complete_skyline(pts, s)
+    assert bool(jnp.all(a == b))
+    assert bool(jnp.all(a == core.skyline_oracle(pts)))
+
+
+@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_groupby_merge_safety(mode, seed):
+    """GROUP BY's 'superset' is over emitted partials + merged state:
+    the fold is a commutative monoid, so any shard interleaving — and
+    the two_pass cache-column union — completes to the exact answer."""
+    rs = np.random.default_rng(seed)
+    keys = jnp.asarray(rs.integers(0, 30, 1600).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 20, 1600).astype(np.int32))
+    r = core.engine_prune("groupby", keys, vals, mode=mode, shards=4,
+                          d=8, w=4, agg="sum")
+    got = core.master_complete_groupby(r, "sum")
+    want = core.groupby_oracle(keys, vals, "sum")
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-2 * max(1, abs(want[k]))

@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypstub import given, settings, st
 
 from repro.configs import get_smoke
 from repro.models import LM
