@@ -1,0 +1,24 @@
+# Convenience targets; scripts/verify.sh is the canonical entry point.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test bench bench-smoke clean
+
+verify:
+	scripts/verify.sh
+
+test:
+	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
+	  $(PYTHON) -m pytest -x -q
+
+bench:  # full benchmark sweep; refreshes BENCH_results.json
+	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
+	  $(PYTHON) -m benchmarks.run
+
+bench-smoke:
+	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
+	  $(PYTHON) -m benchmarks.bench_engine --smoke
+
+clean:
+	find . -name __pycache__ -type d -prune -exec rm -rf {} +
+	rm -rf .pytest_cache

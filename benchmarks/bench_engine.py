@@ -1,12 +1,20 @@
-"""Sharded pruning engine benchmarks: scan vs sharded vs two_pass.
+"""Sharded pruning engine benchmarks: scan vs sharded vs two_pass vs mesh.
 
 The headline number: two_pass TOP-N at m = 2^20 on CPU must beat the
 sequential scan by >= 5x (the lax.scan hot path pays per-step dispatch;
 vmapping the same body over S shards divides the step count by S, and
-the merged-state filter is scan-free). Also measured: DISTINCT engine
-modes, the grid-parallel Pallas path (interpret mode on CPU — kernel
-*bodies* on the XLA backend), and the O(m) cumsum `compact` vs the old
-argsort variant.
+the merged-state filter is scan-free). Mesh mode runs the same S lanes
+inside shard_map over every visible device (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to spread lanes
+on CPU; on one device it measures the shard_map overhead floor). Also
+measured: DISTINCT engine modes — including the lax.map-chunked pass-2
+apply that unbounds S past the [S·n, S·w] compare — shards="auto"
+resolution, the grid-parallel Pallas path (interpret mode on CPU —
+kernel *bodies* on the XLA backend), and the O(m) cumsum `compact` vs
+the old argsort variant.
+
+``--smoke`` shrinks every stream so the whole module runs in seconds —
+the CI wiring (scripts/verify.sh) uses it as an integration canary.
 """
 from __future__ import annotations
 
@@ -15,51 +23,87 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compact, compact_argsort, engine_prune
+from repro.core.engine import _resolve_shards, calibrate_merge_cost
 from repro.kernels import ops as kops
 
 from .common import emit, time_fn
 
 SHARDS = 64
+SMOKE = False
+
+
+def _m(log2_full: int) -> int:
+    return 1 << (12 if SMOKE else log2_full)
 
 
 def topn_modes():
-    m, N, w = 1 << 20, 250, 8
+    m, N, w = _m(20), 250, 8
     rng = np.random.default_rng(0)
     v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
     fns = {}
-    for mode, S in (("scan", 1), ("sharded", SHARDS), ("two_pass", SHARDS)):
+    for mode, S in (("scan", 1), ("sharded", SHARDS), ("two_pass", SHARDS),
+                    ("mesh", SHARDS)):
         fns[mode] = jax.jit(lambda x, mode=mode, S=S: engine_prune(
             "topn_det", x, mode=mode, shards=S, N=N, w=w).keep)
     us = {mode: time_fn(fn, v) for mode, fn in fns.items()}
+    ndev = len(jax.devices())
     for mode, t in us.items():
         unpruned = float(fns[mode](v).mean())
         suffix = "" if mode == "scan" else f"_s{SHARDS}"
+        extra = f";devices={ndev}" if mode == "mesh" else ""
         emit(f"engine_topn_det_{mode}{suffix}", t,
-             f"m=2^20;unpruned={unpruned:.5f}")
+             f"m=2^{m.bit_length()-1};unpruned={unpruned:.5f}{extra}")
     # value IS the ratio (not us) so BENCH_results.json keeps the
     # acceptance metric, not a placeholder
     emit("engine_topn_det_two_pass_speedup_x",
          us["scan"] / us["two_pass"],
          f"target>=5x;holds={us['scan'] / us['two_pass'] >= 5.0}")
+    emit("engine_topn_det_mesh_speedup_x", us["scan"] / us["mesh"],
+         f"devices={ndev};vs_scan")
 
 
 def distinct_modes():
-    # S=8, not 64: DISTINCT's pass-2 compares every entry against the
-    # S·w-column cache union, so work grows with S — the planner's
-    # optimal_shards tradeoff in action.
-    m, d, w, S_d = 1 << 18, 1024, 4, 8
+    # two_pass/sharded at S=8: DISTINCT's unchunked pass-2 compares
+    # every entry against the S·w-column cache union, so the one-shot
+    # [S·n, S·w] materialization bounds S — the planner's optimal_shards
+    # tradeoff in action. The mesh row runs S=64 with the lax.map
+    # chunked apply, which is what lifts that bound.
+    m, d, w, S_d = _m(18), 1024, 4, 8
     rng = np.random.default_rng(1)
     base = rng.integers(1, 1 << 30, 20_000).astype(np.uint32)
     vals = jnp.asarray(base[rng.integers(0, 20_000, m)])
-    for mode, S in (("scan", 1), ("sharded", S_d), ("two_pass", S_d)):
-        fn = jax.jit(lambda x, mode=mode, S=S: engine_prune(
+    # block < per-shard n, so the mesh row really times the lax.map path
+    mesh_block = max(-(-m // SHARDS) // 4, 1)
+    for mode, S, block in (("scan", 1, None), ("sharded", S_d, None),
+                           ("two_pass", S_d, None),
+                           ("mesh", SHARDS, mesh_block)):
+        fn = jax.jit(lambda x, mode=mode, S=S, block=block: engine_prune(
             "distinct", x, mode=mode, shards=S, d=d, w=w,
-            policy="fifo").keep)
+            policy="fifo", apply_block=block).keep)
         us = time_fn(fn, vals)
         unpruned = float(fn(vals).mean())
-        suffix = "" if mode == "scan" else f"_s{S_d}"
+        suffix = "" if mode == "scan" else f"_s{S}"
+        extra = f";chunked_apply_b{block}" if block else ""
         emit(f"engine_distinct_{mode}{suffix}", us,
-             f"m=2^18;unpruned={unpruned:.5f}")
+             f"m=2^{m.bit_length()-1};unpruned={unpruned:.5f}{extra}")
+
+
+def auto_shards():
+    """shards="auto": measured merge cost -> planner's S*. The value
+    recorded is the resolved lane count (not us) so the adaptive-S
+    behavior is diffable across PRs."""
+    m = _m(20)
+    rng = np.random.default_rng(4)
+    v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
+    c, state_bytes = calibrate_merge_cost("topn_det", (v,),
+                                          dict(N=250, w=8))
+    s = _resolve_shards("topn_det", (v,), dict(N=250, w=8), "two_pass",
+                        "auto", 1)
+    emit("engine_topn_det_auto_shards", s,
+         f"m=2^{m.bit_length()-1};c={c:.4g};state_bytes={state_bytes}")
+    us = time_fn(jax.jit(lambda x: engine_prune(
+        "topn_det", x, mode="two_pass", shards=s, N=250, w=8).keep), v)
+    emit("engine_topn_det_two_pass_auto", us, f"S={s}")
 
 
 def parallel_kernels():
@@ -70,19 +114,20 @@ def parallel_kernels():
     win — that comes from ("parallel",) dimension semantics letting the
     grid programs run concurrently, which the interpreter serializes.
     """
-    m, d, w = 1 << 16, 1024, 8
+    m, d, w = _m(16), 1024, 8
     rng = np.random.default_rng(2)
     v = jnp.asarray(rng.permutation(m).astype(np.float32) + 1.0)
     us_seq = time_fn(lambda: kops.topn_prune(v, d=d, w=w, block=256))
     us_par = time_fn(lambda: kops.topn_prune_parallel(
         v, d=d, w=w, shards=16, block=256))
-    emit("kernel_topn_sequential_grid_interp", us_seq, "m=2^16;interpret")
+    emit("kernel_topn_sequential_grid_interp", us_seq,
+         f"m=2^{m.bit_length()-1};interpret")
     emit("kernel_topn_parallel_grid_s16_interp", us_par,
-         "m=2^16;interpret;grid_serialized_by_interpreter")
+         f"m=2^{m.bit_length()-1};interpret;grid_serialized_by_interpreter")
 
 
 def compact_variants():
-    m = 1 << 20
+    m = _m(20)
     rng = np.random.default_rng(3)
     v = jnp.asarray(rng.integers(0, 1 << 30, m).astype(np.int32))
     keep = jnp.asarray(rng.random(m) < 0.1)
@@ -90,21 +135,31 @@ def compact_variants():
     j_old = jax.jit(lambda a, k: compact_argsort(a, k)[0])
     us_new = time_fn(j_new, v, keep)
     us_old = time_fn(j_old, v, keep)
-    emit("compact_cumsum_scatter", us_new, "m=2^20")
+    emit("compact_cumsum_scatter", us_new, f"m=2^{m.bit_length()-1}")
     emit("compact_argsort", us_old,
-         f"m=2^20;cumsum_speedup={us_old / us_new:.2f}x")
+         f"m=2^{m.bit_length()-1};cumsum_speedup={us_old / us_new:.2f}x")
 
 
-def run():
+def run(smoke: bool = False):
+    global SMOKE
+    SMOKE = smoke
     topn_modes()
     distinct_modes()
+    auto_shards()
     parallel_kernels()
     compact_variants()
 
 
 if __name__ == "__main__":
+    import sys
+
     from .common import write_results
 
+    smoke = "--smoke" in sys.argv
     print("name,us_per_call,derived")
-    run()
-    print(f"wrote {write_results()}")
+    run(smoke=smoke)
+    if smoke:
+        # a canary run must not overwrite the full-size numbers
+        print("smoke run: BENCH_results.json left untouched")
+    else:
+        print(f"wrote {write_results()}")

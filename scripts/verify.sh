@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification wrapper: the one command a fresh checkout runs.
+#
+#   scripts/verify.sh            # full tier-1 tests + bench smoke
+#   scripts/verify.sh -k mesh    # extra args forwarded to pytest
+#
+# Sets PYTHONPATH=src and forces an 8-device CPU platform (the mesh
+# engine tests exercise shard_map collectives on it), runs the tier-1
+# pytest suite, then benchmarks/bench_engine.py --smoke as an
+# integration canary. Fails fast if compiled .pyc files ever become
+# tracked in git (they are build artifacts; .gitignore covers them).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+tracked_pyc=$(git ls-files '*.pyc' '__pycache__/*' 2>/dev/null || true)
+if [[ -n "${tracked_pyc}" ]]; then
+    echo "ERROR: compiled artifacts are tracked in git:" >&2
+    echo "${tracked_pyc}" >&2
+    echo "run: git rm -r --cached **/__pycache__ '*.pyc'" >&2
+    exit 1
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+fi
+
+python -m pytest -x -q "$@"
+python -m benchmarks.bench_engine --smoke
+echo "verify: OK"

@@ -20,10 +20,12 @@ from .groupby import groupby_prune, master_complete_groupby, groupby_oracle
 from .filter import (Pred, And, Or, TRUE, relax, filter_prune, evaluate,
                      evaluate_truthtable, master_complete_filter)
 from .engine import (ALGORITHMS, MODES, DistinctMerged, TopNDetMerged,
-                     engine_prune, merge_states)
+                     calibrate_merge_cost, default_mesh, engine_prune,
+                     merge_states, shard_stack)
 from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       pack_queries, rule_count, PackingPlan,
-                      MultiSwitchPlan, plan_multi_switch, optimal_shards)
+                      MultiSwitchPlan, plan_multi_switch, optimal_shards,
+                      MEASURED_MERGE_COSTS)
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

@@ -37,6 +37,26 @@ Execution modes → the paper's deployment story:
     scan-free filter. Tighter pruning than ``sharded`` at near-parallel
     cost.
 
+``mesh``
+    ``two_pass`` lifted onto a ``jax.sharding`` device mesh — the
+    paper's §9 multi-rack deployment (one pruning switch per ToR)
+    mapped to one accelerator per group of switch lanes. Pass 1 runs
+    each shard's scan body inside ``shard_map`` (S lanes split evenly
+    over the mesh axis, vmapped within each device), the per-shard
+    states are all-gathered at the master, folded with the same
+    ``merge_states`` combinators, and pass 2 applies the merged state
+    as the scan-free filter. With the default mesh the keep mask is
+    identical to ``two_pass`` at the same S (lane count is the semantic
+    parameter; the device count only spreads the lanes); an explicit
+    mesh requires ``shards`` to be a multiple of its axis size.
+
+Memory note: the DISTINCT/SKYLINE pass-2 filters compare every entry
+against the S·w-column merged state — an [S·n, S·w] intermediate that
+bounds S on one device. ``apply_block`` chunks that compare with
+``jax.lax.map`` over blocks of entries (mesh mode defaults to
+block=4096), trading one materialization for nb sequential block
+filters of bounded size.
+
 Correctness note (tested in tests/test_engine.py and
 tests/test_superset_safety.py): the parallel modes are *not*
 mask-supersets of the sequential scan — e.g. a shard whose first N
@@ -55,11 +75,15 @@ multi-switch placement/cost modeling lives in ``repro.core.planner``
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..constants import NEG
 from .distinct import distinct_prune
 from .groupby import GroupByState, groupby_prune
@@ -69,10 +93,15 @@ from .pruning import PruneResult
 from .sketches import CountMin
 from .skyline import SkylineState, skyline_prune
 from .topn import TopNRandState, topn_det_prune, topn_rand_prune
+from . import planner
 
-MODES = ("scan", "sharded", "two_pass")
+MODES = ("scan", "sharded", "two_pass", "mesh")
 ALGORITHMS = ("topn_det", "topn_rand", "distinct", "skyline", "groupby",
               "having")
+
+# pass-2 chunk size used when mode="mesh" and the caller didn't pick one
+# (only consulted for the chunkable algorithms, DISTINCT / SKYLINE)
+DEFAULT_MESH_APPLY_BLOCK = 4096
 
 
 # ---------------------------------------------------------- merged states
@@ -128,6 +157,15 @@ class _AlgoSpec:
     # runs the merge+apply anyway — the algorithm is inherently
     # two-pass, even sequentially.
     sharded_needs_merge: bool = False
+    # True when `apply` compares each entry against the full S·w-column
+    # merged state (an [S, n, S*w] intermediate) and therefore benefits
+    # from `apply_block` chunking. The apply must be elementwise over
+    # entries (no positional dependence on the in-shard index).
+    chunkable: bool = False
+    # True when tail pads need an explicit validity column appended to
+    # the streams (GROUP BY: COUNT folds +1 per entry, so no pad *value*
+    # is neutral — only a valid=False flag is).
+    pad_validity: bool = False
 
 
 def _cols_by_shard(stacked: jnp.ndarray) -> jnp.ndarray:
@@ -231,7 +269,9 @@ def _skyline_apply(merged, streams, keep1, p):
 
 # GROUP BY (d×w key/aggregate cache, §4.2/§8) ----------------------------
 def _groupby_scan(streams, p):
-    return groupby_prune(streams[0], streams[1], d=p["d"], w=p["w"],
+    valid = streams[2] if len(streams) > 2 else None
+    return groupby_prune(streams[0], streams[1], valid=valid,
+                         d=p["d"], w=p["w"],
                          agg=p.get("agg", "sum"), seed=p.get("seed", 0))
 
 
@@ -286,23 +326,12 @@ def _skyline_pads(streams, p):
     return (NEG,)
 
 
-def _fold_identity(dtype, agg):
-    """Value whose fold into any aggregate is a no-op, in the stream dtype."""
-    if agg == "sum":
-        return jnp.zeros((), dtype)
-    info = (jnp.finfo(dtype) if jnp.issubdtype(dtype, jnp.floating)
-            else jnp.iinfo(dtype))
-    return jnp.asarray(info.max if agg == "min" else info.min, dtype)
-
-
 def _groupby_pads(streams, p):
-    agg = p.get("agg", "sum")
-    if agg not in ("sum", "min", "max"):
-        raise ValueError(
-            f"groupby agg={agg!r} has no pad identity (each padded entry "
-            f"would add 1); pass a stream length divisible by `shards`")
-    # route pads at the first real key with the fold identity: exact no-op
-    return (streams[0][0], _fold_identity(streams[1].dtype, agg))
+    # pads carry valid=False, so the gated fold ignores key and value
+    # entirely — any fill works, including for agg="count" (which has no
+    # neutral pad *value*: every entry would add 1 without the flag)
+    return (streams[0][0], jnp.zeros((), streams[1].dtype),
+            jnp.bool_(False))[: len(streams)]
 
 
 def _having_pads(streams, p):
@@ -317,11 +346,14 @@ _SPECS: dict[str, _AlgoSpec] = {
     "topn_rand": _AlgoSpec(_topn_rand_scan, _value_pads,
                            _topn_rand_merge, _topn_rand_apply),
     "distinct": _AlgoSpec(_distinct_scan, _fingerprint_pads,
-                          _distinct_merge, _distinct_apply),
+                          _distinct_merge, _distinct_apply,
+                          chunkable=True),
     "skyline": _AlgoSpec(_skyline_scan, _skyline_pads,
-                         _skyline_merge, _skyline_apply),
+                         _skyline_merge, _skyline_apply,
+                         chunkable=True),
     "groupby": _AlgoSpec(_groupby_scan, _groupby_pads,
-                         _groupby_merge, _groupby_apply),
+                         _groupby_merge, _groupby_apply,
+                         pad_validity=True),
     "having": _AlgoSpec(_having_scan, _having_pads,
                         _having_merge, _having_apply,
                         sharded_needs_merge=True),
@@ -329,8 +361,13 @@ _SPECS: dict[str, _AlgoSpec] = {
 
 
 # ------------------------------------------------------------------ engine
-def _shard(arr: jnp.ndarray, shards: int, fill) -> jnp.ndarray:
-    """[m, ...] -> [S, ceil(m/S), ...] contiguous chunks, tail-padded."""
+def shard_stack(arr: jnp.ndarray, shards: int, fill=0) -> jnp.ndarray:
+    """[m, ...] -> [S, ceil(m/S), ...] contiguous chunks, tail-padded.
+
+    The canonical shard layout shared with ``query.tables.Table
+    .stacked_shards``: shard i holds entries [i*n, (i+1)*n) of the
+    stream, the final shard tail-padded with ``fill`` when S ∤ m.
+    """
     m = arr.shape[0]
     n = -(-m // shards)
     pad = shards * n - m
@@ -345,6 +382,82 @@ def _unshard(x: jnp.ndarray, m: int) -> jnp.ndarray:
     return x.reshape((-1,) + x.shape[2:])[:m]
 
 
+def _pad_axis1(a: jnp.ndarray, pad: int, fill) -> jnp.ndarray:
+    block = jnp.broadcast_to(jnp.asarray(fill, a.dtype),
+                             a.shape[:1] + (pad,) + a.shape[2:])
+    return jnp.concatenate([a, block], axis=1)
+
+
+def _apply_chunked(spec: _AlgoSpec, merged, shard_streams, keep1, params,
+                   block: int) -> jnp.ndarray:
+    """Run spec.apply over blocks of entries with ``lax.map``.
+
+    Bounds the [S, n, S*w] pass-2 intermediate at [S, block, S*w]: the
+    per-entry compare against the merged state is elementwise over
+    entries, so filtering nb blocks sequentially is exact (tested:
+    chunked == unchunked in tests/test_mesh_engine.py).
+    """
+    S, n = keep1.shape
+    nb = -(-n // block)
+    pad = nb * block - n
+    if pad:
+        flat = tuple(s.reshape((-1,) + s.shape[2:]) for s in shard_streams)
+        fills = spec.pads(flat, params)
+        shard_streams = tuple(_pad_axis1(s, pad, f)
+                              for s, f in zip(shard_streams, fills))
+        keep1 = _pad_axis1(keep1, pad, False)
+    # [S, nb*block, ...] -> [nb, S, block, ...] so lax.map walks blocks
+    streams_b = tuple(
+        jnp.moveaxis(s.reshape((S, nb, block) + s.shape[2:]), 1, 0)
+        for s in shard_streams)
+    keep_b = jnp.moveaxis(keep1.reshape(S, nb, block), 1, 0)
+    out = jax.lax.map(
+        lambda xs: spec.apply(merged, xs[0], xs[1], params),
+        (streams_b, keep_b))
+    return jnp.moveaxis(out, 0, 1).reshape(S, nb * block)[:, :n]
+
+
+def default_mesh(axis: str = "shards", num_devices: int | None = None):
+    """1-D mesh over the first ``num_devices`` (default: all) devices —
+    the multi-ToR rack row."""
+    devs = jax.devices()
+    if num_devices is not None:
+        devs = devs[:num_devices]
+    return jax.sharding.Mesh(np.asarray(devs), (axis,))
+
+
+def _mesh_for_shards(shards: int, axis: str):
+    """Largest mesh whose axis size divides S: S lanes spread evenly.
+
+    Using a divisor submesh (rather than rejecting S) keeps mesh mode's
+    keep mask identical to two_pass at the same S for every S — the
+    lane count, not the device count, is the semantic parameter.
+    """
+    ndev = len(jax.devices())
+    d = max(k for k in range(1, min(ndev, shards) + 1) if shards % k == 0)
+    return default_mesh(axis, d)
+
+
+def _mesh_pass1(spec: _AlgoSpec, shard_streams, params, mesh, axis: str):
+    """Pass 1 on the device mesh: S lanes split over the mesh axis.
+
+    Each device scans its S/D contiguous lanes with the vmapped scan
+    body; ``out_specs=P(axis)`` all-gathers the per-lane states (and
+    keep masks / emissions) back to the caller — the master — in the
+    same [S, ...] stacked layout the single-device vmap produces.
+    """
+    ndev = mesh.shape[axis]
+    shards = shard_streams[0].shape[0]
+    if shards % ndev:
+        raise ValueError(
+            f"mode='mesh' needs shards divisible by the mesh axis size "
+            f"({shards} lanes over {ndev} devices); use shards='auto'")
+    worker = lambda *local: jax.vmap(
+        lambda *sh: spec.scan(sh, params))(*local)
+    sm = compat.shard_map(worker, mesh, P(axis), P(axis))
+    return sm(*shard_streams)
+
+
 def merge_states(algo: str, stacked_states, **params):
     """Fold S shard-local switch states into one global state.
 
@@ -355,18 +468,150 @@ def merge_states(algo: str, stacked_states, **params):
     return _SPECS[algo].merge(stacked_states, params)
 
 
-def engine_prune(algo: str, *streams, mode: str = "scan", shards: int = 8,
+# -------------------------------------------------- adaptive S selection
+# (algo, param signature) -> (merge_byte_cost c, per-shard state_bytes).
+# c is in the planner's units: master cost of folding one shipped state
+# byte, measured in per-entry stream work — T(S) = m/S + c·S·state_bytes.
+_CALIBRATION: dict[tuple, tuple[float, int]] = {}
+
+_PROBE_SHARDS = 4
+_PROBE_N = 256  # entries per probe shard
+
+
+def _probe_streams(streams, algo: str) -> tuple:
+    """Concrete miniature streams with the real dtypes/trailing shapes.
+
+    Built from shapes only — never from values — so calibration also
+    works when ``engine_prune`` is called under ``jax.jit`` and the
+    streams are tracers.
+    """
+    rng = np.random.default_rng(0)
+    m = _PROBE_SHARDS * _PROBE_N
+    out = []
+    for s in streams:
+        shape = (m,) + tuple(s.shape[1:])
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            out.append(jnp.asarray(
+                (rng.random(shape) * 100 + 1).astype(np.float32)
+            ).astype(s.dtype))
+        elif s.dtype == jnp.bool_:
+            out.append(jnp.ones(shape, jnp.bool_))
+        else:
+            out.append(jnp.asarray(
+                rng.integers(1, 1000, shape)).astype(s.dtype))
+    return tuple(out)
+
+
+def _time_us(fn, *args) -> float:
+    fn(*args)  # compile + warm
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return sorted(times)[1]
+
+
+def calibrate_merge_cost(algo: str, streams, params) -> tuple[float, int]:
+    """Measure the real merge cost for `algo` once; cached per signature.
+
+    Runs pass 1 on a tiny synthetic stream, times (a) the per-entry scan
+    and (b) the S-state merge, and returns (c, state_bytes) where c is
+    the measured merge cost per shipped state byte in per-entry units —
+    the empirical constant for ``planner.optimal_shards``. The result is
+    recorded in ``planner.MEASURED_MERGE_COSTS`` so planning code (and
+    ROADMAP bookkeeping) can see the constants the engine actually uses.
+    """
+    key = (algo,
+           tuple((str(s.dtype), tuple(s.shape[1:])) for s in streams),
+           tuple(sorted(
+               (k, v) for k, v in params.items()
+               if isinstance(v, (int, float, str, bool)))))
+    if key in _CALIBRATION:
+        return _CALIBRATION[key]
+    spec = _SPECS[algo]
+    probes = _probe_streams(streams, algo)
+    shard_probes = tuple(shard_stack(s, _PROBE_SHARDS) for s in probes)
+    pass1 = jax.jit(lambda *sh: jax.vmap(
+        lambda *x: spec.scan(x, params))(*sh).state)
+    stacked = pass1(*shard_probes)
+    state_bytes = int(sum(
+        leaf.nbytes for leaf in jax.tree_util.tree_leaves(stacked))
+        // _PROBE_SHARDS)
+    us_scan = _time_us(
+        jax.jit(lambda *x: spec.scan(x, params).keep), *probes)
+    us_merge = _time_us(
+        jax.jit(lambda st: spec.merge(st, params)), stacked)
+    per_entry = max(us_scan / (_PROBE_SHARDS * _PROBE_N), 1e-9)
+    c = (us_merge / max(_PROBE_SHARDS * state_bytes, 1)) / per_entry
+    _CALIBRATION[key] = (c, state_bytes)
+    planner.MEASURED_MERGE_COSTS[algo] = c
+    return c, state_bytes
+
+
+def _resolve_shards(algo: str, streams, params, mode: str, shards,
+                    ndev: int) -> int:
+    """Turn shards=None/"auto" into a concrete lane count for `mode`.
+
+    ndev is the mesh axis size (1 outside mesh mode). Auto-resolved
+    counts are clamped to the stream length (a multiple of ndev in mesh
+    mode); explicit ints are passed through and validated by
+    ``engine_prune`` / ``_mesh_pass1``.
+    """
+    m = streams[0].shape[0]
+    if isinstance(shards, int):
+        return shards
+    if shards is None:
+        return ndev if mode == "mesh" else min(8, m)
+    if shards != "auto":
+        raise ValueError(
+            f"shards must be an int, None or 'auto', got {shards!r}")
+    if mode == "scan":
+        return 1
+    c, state_bytes = calibrate_merge_cost(algo, streams, params)
+    s = planner.optimal_shards(m, state_bytes, merge_byte_cost=c)
+    if mode == "mesh":
+        if m < ndev:
+            raise ValueError(
+                f"stream length {m} is shorter than the mesh axis "
+                f"({ndev} devices)")
+        s = -(-s // ndev) * ndev           # round up to a lane multiple
+        s = min(s, m // ndev * ndev)       # ...but never past the stream
+        return max(s, ndev)
+    return max(1, min(s, m))
+
+
+def engine_prune(algo: str, *streams, mode: str = "scan",
+                 shards: int | str | None = None, mesh=None,
+                 mesh_axis: str = "shards", apply_block: int | None = None,
                  **params) -> PruneResult:
     """Run pruner `algo` over its stream(s) in the requested mode.
 
     streams: the algorithm's data arrays, all sharing leading dim m
-    (topn/distinct/skyline: one array; groupby/having: keys, values —
-    having accepts values=None for COUNT). Non-divisible m is handled by
+    (topn/distinct/skyline: one array; groupby: keys, values and an
+    optional bool validity column; having: keys, values — having
+    accepts values=None for COUNT). Non-divisible m is handled by
     tail-padding the final shard with algorithm-safe neutral entries.
+
+    shards: lane count S. ``None`` keeps the historical defaults (8 for
+    sharded/two_pass, one lane per device for mesh); ``"auto"`` sizes S
+    from the planner's T(S) = m/S + c·S·state_bytes model with the
+    measured (cached) per-algorithm merge cost c.
+
+    mesh / mesh_axis: for ``mode="mesh"`` — the ``jax.sharding`` mesh to
+    run pass 1 on. Default: a 1-D mesh over the largest device count
+    that divides S, so any S works. An explicit mesh requires S to be
+    a multiple of its axis size; each device scans S/D lanes.
+
+    apply_block: chunk size for the DISTINCT/SKYLINE pass-2 filter
+    (``lax.map`` over entry blocks). Defaults to unchunked except in
+    mesh mode, where large S is the point and the [S·n, S·w] compare
+    would otherwise bound it.
 
     Returns a PruneResult whose keep mask is over the original m
     entries. state is the stacked per-shard states (`sharded`), the
-    merged global state (`two_pass`), or the final scan state (`scan`).
+    merged global state (`two_pass`/`mesh`), or the final scan state
+    (`scan`).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -374,17 +619,32 @@ def engine_prune(algo: str, *streams, mode: str = "scan", shards: int = 8,
     streams = tuple(s for s in streams if s is not None)
     m = streams[0].shape[0]
 
+    if mode == "mesh":
+        ndev = (mesh.shape[mesh_axis] if mesh is not None
+                else len(jax.devices()))
+    else:
+        ndev = 1
+    shards = _resolve_shards(algo, streams, params, mode, shards, ndev)
     if mode == "scan" or shards <= 1:
         return spec.scan(streams, params)
     if shards > m:
         raise ValueError(f"shards={shards} exceeds stream length {m}")
+    if mode == "mesh" and mesh is None:
+        mesh = _mesh_for_shards(shards, mesh_axis)
 
+    if m % shards and spec.pad_validity and len(streams) < 3:
+        # pads must be inert under *any* aggregate: append a validity
+        # column (True for real entries) the scan body gates folds on
+        streams = streams + (jnp.ones(m, jnp.bool_),)
     # pads are only consulted when the final shard actually needs filling
     fills = (spec.pads(streams, params) if m % shards
              else (0,) * len(streams))
-    shard_streams = tuple(_shard(s, shards, f)
+    shard_streams = tuple(shard_stack(s, shards, f)
                           for s, f in zip(streams, fills))
-    r1 = jax.vmap(lambda *sh: spec.scan(sh, params))(*shard_streams)
+    if mode == "mesh":
+        r1 = _mesh_pass1(spec, shard_streams, params, mesh, mesh_axis)
+    else:
+        r1 = jax.vmap(lambda *sh: spec.scan(sh, params))(*shard_streams)
     # emissions are switch→master traffic, not per-entry masks: keep the
     # full padded length — a tail pad can evict a REAL partial (GROUP BY)
     # whose emission sits past position m and must still reach the master
@@ -397,6 +657,13 @@ def engine_prune(algo: str, *streams, mode: str = "scan", shards: int = 8,
                            emitted=emitted)
 
     merged = spec.merge(r1.state, params)
-    keep2 = spec.apply(merged, shard_streams, r1.keep, params)
+    if apply_block is None and mode == "mesh" and spec.chunkable:
+        apply_block = DEFAULT_MESH_APPLY_BLOCK
+    if apply_block and spec.chunkable \
+            and apply_block < shard_streams[0].shape[1]:
+        keep2 = _apply_chunked(spec, merged, shard_streams, r1.keep,
+                               params, apply_block)
+    else:
+        keep2 = spec.apply(merged, shard_streams, r1.keep, params)
     return PruneResult(keep=_unshard(keep2, m), state=merged,
                        emitted=emitted)

@@ -40,15 +40,25 @@ class GroupByState:
 
 
 @partial(jax.jit, static_argnames=("d", "w", "agg", "seed"))
-def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray, *, d: int, w: int,
+def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray,
+                  valid: jnp.ndarray | None = None, *, d: int, w: int,
                   agg: str = "sum", seed: int = 0) -> PruneResult:
-    """Returns keep mask + emitted (evicted_key, evicted_agg, evicted_valid)."""
+    """Returns keep mask + emitted (evicted_key, evicted_agg, evicted_valid).
+
+    valid: optional bool[m] entry-validity column. Entries with
+    valid=False leave the switch state completely untouched (no fold, no
+    insertion, no eviction) — the hook sharded execution uses to make
+    tail pads inert under *every* aggregate, including COUNT, which has
+    no neutral pad value (each entry folds +1 regardless of its value).
+    """
     fold = _FOLD[agg]
     init_v = jnp.float32(_INIT[agg])
     rows = hash_mod(keys, d, seed=seed)
+    if valid is None:
+        valid = jnp.ones(keys.shape[0], jnp.bool_)
 
-    def body(state, krv):
-        k, r, v = krv
+    def body(state, krvo):
+        k, r, v, ok = krvo
         krow, arow, vrow = state.keys[r], state.aggs[r], state.valid[r]
         hitvec = (krow == k) & vrow
         hit = jnp.any(hitvec)
@@ -56,13 +66,13 @@ def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray, *, d: int, w: int,
         # fold into cached aggregate on hit
         arow_hit = arow.at[hitpos].set(fold(arow[hitpos], v))
         # miss: insert (k, fold(init, v)) at front, evict last slot
-        ev_k, ev_a, ev_valid = krow[-1], arow[-1], vrow[-1] & ~hit
+        ev_k, ev_a, ev_valid = krow[-1], arow[-1], vrow[-1] & ~hit & ok
         krow_miss = jnp.roll(krow, 1).at[0].set(k)
         arow_miss = jnp.roll(arow, 1).at[0].set(fold(init_v, v))
         vrow_miss = jnp.roll(vrow, 1).at[0].set(True)
-        new_k = jnp.where(hit, krow, krow_miss)
-        new_a = jnp.where(hit, arow_hit, arow_miss)
-        new_vld = jnp.where(hit, vrow, vrow_miss)
+        new_k = jnp.where(ok, jnp.where(hit, krow, krow_miss), krow)
+        new_a = jnp.where(ok, jnp.where(hit, arow_hit, arow_miss), arow)
+        new_vld = jnp.where(ok, jnp.where(hit, vrow, vrow_miss), vrow)
         state = GroupByState(
             keys=state.keys.at[r].set(new_k),
             aggs=state.aggs.at[r].set(new_a),
@@ -77,7 +87,7 @@ def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray, *, d: int, w: int,
         valid=jnp.zeros((d, w), jnp.bool_),
     )
     state, (keep, ev_k, ev_a, ev_valid) = jax.lax.scan(
-        body, init, (keys, rows, values.astype(jnp.float32)))
+        body, init, (keys, rows, values.astype(jnp.float32), valid))
     return PruneResult(keep=keep, state=state, emitted=(ev_k, ev_a, ev_valid))
 
 

@@ -149,8 +149,15 @@ class MultiSwitchPlan:
 
 
 # master-side cost of folding one state byte, in units of per-entry
-# stream work (the merge is vectorized, entries stream one at a time)
+# stream work (the merge is vectorized, entries stream one at a time).
+# This is the *analytic prior*; the engine's timed microbench
+# (`core.engine.calibrate_merge_cost`) overwrites it per algorithm.
 _MERGE_BYTE_COST = 1.0 / 64.0
+
+# algo -> measured merge cost per shipped state byte, in per-entry units
+# (written by core.engine.calibrate_merge_cost, read by optimal_shards;
+# process-lifetime cache — the microbench runs once per algo/signature)
+MEASURED_MERGE_COSTS: dict[str, float] = {}
 
 
 def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
@@ -180,13 +187,22 @@ def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
         est_speedup=m / t_parallel, feasible=True)
 
 
-def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096) -> int:
+def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096,
+                   merge_byte_cost: float | None = None,
+                   algo: str | None = None) -> int:
     """argmin_S of T(S) = m/S + c·S·state_bytes: S* = sqrt(m / (c·bytes)).
 
-    Clamped to [1, max_shards]; with zero state (pure filters) the model
-    degenerates and every switch you can get helps.
+    The per-byte merge cost c is resolved empirically when available:
+    an explicit ``merge_byte_cost`` wins, then the measured constant for
+    ``algo`` (recorded by ``core.engine.calibrate_merge_cost``), then
+    the analytic ``_MERGE_BYTE_COST`` prior. Clamped to [1, max_shards];
+    with zero state (pure filters) the model degenerates and every
+    switch you can get helps.
     """
-    c = _MERGE_BYTE_COST * state_bytes
+    if merge_byte_cost is None:
+        merge_byte_cost = MEASURED_MERGE_COSTS.get(
+            algo, _MERGE_BYTE_COST) if algo else _MERGE_BYTE_COST
+    c = merge_byte_cost * state_bytes
     if c <= 0:
         return max_shards
     s = int(round(math.sqrt(m / c)))

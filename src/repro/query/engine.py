@@ -4,17 +4,21 @@ Deployment mapping (DESIGN.md §2):
  * mesh axis "data" plays the worker rack; each shard's pruning runs at
    the point where its traffic would cross the wire (inside shard_map,
    immediately before the gather to the master).
- * JOIN / HAVING sketches are *mergeable* (Bloom = OR, Count-Min = +), so
-   the cross-worker collective reproduces the single shared switch state
-   exactly. DISTINCT / TOP-N / GROUP BY / SKYLINE use per-worker state —
-   the paper's §9 multi-switch hierarchical mode (correctness per-subset,
-   slightly lower pruning rate than one shared switch).
+ * Every single-table pruner (DISTINCT / TOP-N / SKYLINE / GROUP BY /
+   HAVING) executes through ``core.engine_prune`` — ``mode="mesh"``
+   when a mesh is given (one switch lane per worker, shard-local states
+   all-gathered and folded at the master, merged-state pass-2 filter),
+   ``mode="scan"`` otherwise. The engine is the single entry point for
+   scan / sharded / two_pass / mesh execution; this module only adds
+   table plumbing and master completion.
+ * JOIN keeps its bespoke two-table Bloom exchange (filters are
+   mergeable: OR across workers reproduces the shared switch state
+   exactly); FILTER is stateless.
  * The master completes the query on the pruned survivors only.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -43,18 +47,15 @@ def _num_workers(mesh, axis="data") -> int:
     return mesh.shape[axis]
 
 
-def _shard_call(mesh, axis, fn, *arrays):
-    """Run fn per worker shard; arrays are [workers, per]-stacked.
-
-    fn takes unstacked shards and returns a pytree of [k]-shaped arrays;
-    results come back stacked [workers, k].
-    """
+def _engine_call(algo: str, streams: tuple, mesh, axis: str,
+                 params: dict) -> core.PruneResult:
+    """One engine invocation per query: mesh-backed when a mesh exists
+    (S = one lane per worker on the data axis), sequential otherwise."""
     if mesh is None:
-        return jax.tree.map(lambda y: y[None], fn(*[a[0] for a in arrays]))
-    sm = _shard_map(
-        lambda *xs: jax.tree.map(lambda y: y[None], fn(*[x[0] for x in xs])),
-        mesh, P(axis), P(axis))
-    return sm(*arrays)
+        return core.engine_prune(algo, *streams, mode="scan", **params)
+    return core.engine_prune(algo, *streams, mode="mesh",
+                             shards=mesh.shape[axis], mesh=mesh,
+                             mesh_axis=axis, **params)
 
 
 def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
@@ -64,61 +65,54 @@ def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
     if k == "join":
         return _run_join(spec, tables, mesh, axis, p)
     table: Table = tables
-    nw = _num_workers(mesh, axis)
     if k == "distinct":
         (cname,) = spec.columns
         vals = table.cols[cname]
-        stacked = table.stacked_shards(nw)[cname]
-        fn = lambda v: core.distinct_prune(
-            v, d=p["d"], w=p["w"], policy=p.get("policy", "lru")).keep
-        keep = _gather_keep(mesh, axis, fn, stacked, vals.shape[0])
-        out_mask = core.master_complete_distinct(vals[: keep.shape[0]], keep)
-        uniq = np.unique(np.asarray(vals[: keep.shape[0]])[np.asarray(out_mask)])
-        return _result(uniq, keep)
+        r = _engine_call("distinct", (vals,), mesh, axis,
+                         dict(d=p["d"], w=p["w"],
+                              policy=p.get("policy", "lru")))
+        out_mask = core.master_complete_distinct(vals, r.keep)
+        uniq = np.unique(np.asarray(vals)[np.asarray(out_mask)])
+        return _result(uniq, r.keep)
     if k == "topn":
         (cname,) = spec.columns
         vals = table.cols[cname]
-        stacked = table.stacked_shards(nw)[cname]
         if p.get("mode", "rand") == "rand":
-            fn = lambda v: core.topn_rand_prune(v, d=p["d"], w=p["w"]).keep
+            algo, params = "topn_rand", dict(d=p["d"], w=p["w"])
         else:
-            fn = lambda v: core.topn_det_prune(v, N=p["N"], w=p.get("w", 4)).keep
-        keep = _gather_keep(mesh, axis, fn, stacked, vals.shape[0])
-        vv = vals[: keep.shape[0]]
-        topv, topi = core.master_complete_topn(vv, keep, p["N"])
-        return _result((np.asarray(topv), np.asarray(topi)), keep)
+            algo, params = "topn_det", dict(N=p["N"], w=p.get("w", 4))
+        r = _engine_call(algo, (vals,), mesh, axis, params)
+        topv, topi = core.master_complete_topn(vals, r.keep, p["N"])
+        return _result((np.asarray(topv), np.asarray(topi)), r.keep)
     if k == "having":
         kname, vname = spec.columns
         keys, vals = table.cols[kname], table.cols[vname]
-        sk = table.stacked_shards(nw)
-        keep = _having_distributed(mesh, axis, sk[kname], sk[vname], p)
-        n = keep.shape[0]
-        out = core.master_complete_having(keys[:n], vals[:n], keep,
-                                          p["threshold"], p.get("agg", "sum"))
-        return _result(out, keep)
+        r = _engine_call("having", (keys, vals), mesh, axis,
+                         dict(threshold=p["threshold"],
+                              rows=p.get("rows", 3),
+                              width=p.get("width", 1024),
+                              agg=p.get("agg", "sum")))
+        out = core.master_complete_having(keys, vals, r.keep,
+                                          p["threshold"],
+                                          p.get("agg", "sum"))
+        return _result(out, r.keep)
     if k == "skyline":
         pts = jnp.stack([table.cols[c] for c in spec.columns], axis=-1)
-        per = pts.shape[0] // nw * nw
-        stacked = pts[:per].reshape(nw, -1, pts.shape[-1])
-        fn = lambda x: core.skyline_prune(x, w=p["w"], score=p.get("score", "aph")).keep
-        keep = _gather_keep(mesh, axis, fn, stacked, per)
-        out = core.master_complete_skyline(pts[:per], keep)
-        return _result(np.asarray(out), keep)
+        r = _engine_call("skyline", (pts,), mesh, axis,
+                         dict(w=p["w"], score=p.get("score", "aph")))
+        out = core.master_complete_skyline(pts, r.keep)
+        return _result(np.asarray(out), r.keep)
     if k == "groupby":
         kname, vname = spec.columns
-        sk = table.stacked_shards(nw)
-        res = _shard_call(mesh, axis,
-                          lambda kk, vv: _gb_flat(kk, vv, p), sk[kname], sk[vname])
-        # fold all workers' partials on the master (monoid ⇒ exact)
+        keys, vals = table.cols[kname], table.cols[vname]
         agg = p.get("agg", "sum")
-        out: dict = {}
-        fold = {"sum": lambda a, b: a + b, "count": lambda a, b: a + b,
-                "min": min, "max": max}[agg]
-        ks, as_, oks = (np.asarray(x).ravel() for x in res)
-        for kk, aa, ok in zip(ks.tolist(), as_.tolist(), oks.tolist()):
-            if ok:
-                out[kk] = fold(out[kk], aa) if kk in out else aa
-        traffic = jnp.asarray(np.asarray(res[2]).ravel())
+        r = _engine_call("groupby", (keys, vals), mesh, axis,
+                         dict(d=p["d"], w=p["w"], agg=agg))
+        out = core.master_complete_groupby(r, agg)
+        # switch→master traffic = valid evictions + final state entries
+        ev_ok = np.asarray(r.emitted[2]).ravel()
+        st_ok = np.asarray(r.state.valid).ravel()
+        traffic = jnp.asarray(np.concatenate([ev_ok, st_ok]))
         return _result(out, ~traffic)  # emitted partials are the traffic
     if k == "filter":
         formula = p["formula"]
@@ -129,44 +123,14 @@ def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
     raise KeyError(k)
 
 
-def _gb_flat(kk, vv, p):
-    r = core.groupby_prune(kk, vv, d=p["d"], w=p["w"], agg=p.get("agg", "sum"))
-    ev_k, ev_a, ev_ok = r.emitted
-    st = r.state
-    keys = jnp.concatenate([ev_k, st.keys.ravel()])
-    aggs = jnp.concatenate([ev_a, st.aggs.ravel()])
-    oks = jnp.concatenate([ev_ok, st.valid.ravel()])
-    return keys, aggs, oks
-
-
-def _having_distributed(mesh, axis, keys_st, vals_st, p):
-    rows, width = p.get("rows", 3), p.get("width", 1024)
-    agg = p.get("agg", "sum")
-
-    def worker(kk, vv):
-        kk, vv = kk[0], vv[0]
-        weights = None if agg == "count" else vv
-        local = core.sketches.cms_build(kk, weights, rows, width)
-        table = local.table
-        if mesh is not None:
-            table = jax.lax.psum(table, axis)  # merged switch state (exact)
-        merged = core.sketches.CountMin(table=table, seed=local.seed)
-        est = core.sketches.cms_query(merged, kk)
-        return (est > p["threshold"])[None]
-
-    if mesh is None:
-        return worker(keys_st[:1] if keys_st.ndim > 1 else keys_st[None],
-                      vals_st[:1] if vals_st.ndim > 1 else vals_st[None])[0]
-    sm = _shard_map(worker, mesh, P(axis), P(axis))
-    return sm(keys_st, vals_st).reshape(-1)
-
-
 def _run_join(spec, tables, mesh, axis, p):
     ta, tb = tables
     ka_name, kb_name = spec.columns
     nw = _num_workers(mesh, axis)
-    ka_st = ta.stacked_shards(nw)[ka_name]
-    kb_st = tb.stacked_shards(nw)[kb_name]
+    # pad fill = the first key: already a member, so the padded shards
+    # build bit-identical Bloom filters and no tail row is dropped
+    ka_st = ta.stacked_shards(nw, fills={ka_name: ta.cols[ka_name][0]})[ka_name]
+    kb_st = tb.stacked_shards(nw, fills={kb_name: tb.cols[kb_name][0]})[kb_name]
     nbits, H = p["nbits"], p.get("num_hashes", 3)
 
     def worker(ka, kb):
@@ -188,21 +152,15 @@ def _run_join(spec, tables, mesh, axis, p):
         sm = _shard_map(worker, mesh, P(axis), P(axis))
         keep_a, keep_b = sm(ka_st, kb_st)
         keep_a, keep_b = keep_a.reshape(-1), keep_b.reshape(-1)
-    na, nb = keep_a.shape[0], keep_b.shape[0]
+    na, nb = min(ta.num_rows, keep_a.shape[0]), min(tb.num_rows,
+                                                    keep_b.shape[0])
+    keep_a, keep_b = keep_a[:na], keep_b[:nb]
     va = ta.cols[p.get("payload_a", ka_name)][:na]
     vb = tb.cols[p.get("payload_b", kb_name)][:nb]
     out = core.master_complete_join(ta.cols[ka_name][:na], va, keep_a,
                                     tb.cols[kb_name][:nb], vb, keep_b)
     stats_keep = jnp.concatenate([keep_a, keep_b])
     return _result(out, stats_keep)
-
-
-def _gather_keep(mesh, axis, fn, stacked, total):
-    if mesh is None:
-        flat = stacked.reshape(-1, *stacked.shape[2:])
-        return fn(flat[:total])
-    sm = _shard_map(lambda x: fn(x[0])[None], mesh, P(axis), P(axis))
-    return sm(stacked).reshape(-1)
 
 
 def _result(output, keep) -> dict:

@@ -12,6 +12,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import shard_stack
+
 
 @dataclasses.dataclass
 class Table:
@@ -32,8 +34,19 @@ class Table:
                              {k: v[i * per:(i + 1) * per] for k, v in self.cols.items()}))
         return out
 
-    def stacked_shards(self, num: int) -> dict:
-        """cols reshaped to [num, m//num] — the shard_map input layout."""
+    def stacked_shards(self, num: int, fills: dict | None = None) -> dict:
+        """cols reshaped to [num, per] — the shard_map input layout
+        shared with ``core.engine.shard_stack``.
+
+        Without ``fills`` the legacy truncating layout is kept
+        (per = m//num, tail rows dropped). With ``fills`` (col -> pad
+        value) columns are tail-padded to per = ceil(m/num) instead, so
+        no row is lost; callers must pick algorithm-safe fills and
+        slice any per-row result back to ``num_rows``.
+        """
+        if fills is not None:
+            return {k: shard_stack(v, num, fills.get(k, 0))
+                    for k, v in self.cols.items()}
         m = self.num_rows
         per = m // num
         return {k: v[:num * per].reshape(num, per) for k, v in self.cols.items()}

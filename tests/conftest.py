@@ -1,3 +1,16 @@
+import os
+
+# Give the CPU test runs a multi-device platform BEFORE jax initializes
+# (conftest imports precede every test module): the mesh engine tests
+# need >= 4 devices to actually exercise shard_map collectives, and the
+# rest of the suite is device-count agnostic (meshes are built over
+# whatever exists). Respect an operator-provided flag.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 import numpy as np
 import pytest
 

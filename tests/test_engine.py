@@ -21,7 +21,7 @@ import pytest
 from repro import core
 from repro.core import engine_prune, merge_states
 
-MODES = ("sharded", "two_pass")
+MODES = ("sharded", "two_pass", "mesh")
 SHARDS = (2, 5)  # 5 does not divide the stream lengths → padding path
 
 
@@ -145,13 +145,15 @@ def test_groupby_pad_eviction_reaches_master(mode):
         == core.groupby_oracle(keys, vals, "sum")
 
 
-def test_groupby_count_needs_divisible_stream():
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shards", [2, 3])
+def test_groupby_count_survives_padded_shards(mode, shards):
+    """COUNT has no neutral pad *value* (every entry folds +1); the
+    engine appends a valid=False column to tail pads instead, so
+    non-divisible streams are exact under every mode (was: ValueError)."""
     keys = jnp.asarray(np.arange(10, dtype=np.uint32))
     vals = jnp.asarray(np.ones(10, np.int32))
-    with pytest.raises(ValueError, match="pad identity"):
-        engine_prune("groupby", keys, vals, mode="sharded", shards=3,
-                     d=4, w=2, agg="count")
-    r = engine_prune("groupby", keys, vals, mode="two_pass", shards=2,
+    r = engine_prune("groupby", keys, vals, mode=mode, shards=shards,
                      d=4, w=2, agg="count")
     got = core.master_complete_groupby(r, "count")
     assert got == core.groupby_oracle(keys, vals, "count")

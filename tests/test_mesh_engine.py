@@ -1,0 +1,202 @@
+"""Mesh-backed pruning engine (paper §9 multi-rack deployment).
+
+Runs on the multi-device CPU platform conftest.py configures
+(``--xla_force_host_platform_device_count=8``): pass 1 executes inside
+``shard_map`` over a real device mesh, so these tests exercise the
+collective gather of per-lane switch states — not just the vmap
+simulation. The properties checked are the same superset-of-OPT
+contracts as test_engine.py (mesh masks are NOT compared against the
+sequential scan's mask; see the engine docstring), plus the structural
+guarantees specific to the mesh backend:
+
+ * mesh(S) == two_pass(S) keep masks — the device count only spreads
+   the S lanes, it never changes the semantics;
+ * chunked pass-2 applies (``apply_block``) are exact for
+   DISTINCT/SKYLINE, which is what unbounds S beyond the [S·n, S·w]
+   single-materialization limit;
+ * ``shards="auto"`` resolves to a lane multiple of the mesh axis and
+   records the measured merge-cost constants in the planner.
+"""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core import engine_prune
+from repro.core.planner import MEASURED_MERGE_COSTS
+
+requires_multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >=4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+# ------------------------------------------------- superset-of-OPT on mesh
+@requires_multidevice
+@pytest.mark.parametrize("shards", [8, 24])  # 24: 3 lanes per device
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mesh_topn_det_exact(shards, seed):
+    rs = np.random.default_rng(seed)
+    m, N = 3001, 25
+    v = jnp.asarray((rs.random(m) * 1e5 + 1).astype(np.float32))
+    r = engine_prune("topn_det", v, mode="mesh", shards=shards, N=N, w=6)
+    topv, _ = core.master_complete_topn(v, r.keep, N)
+    np.testing.assert_allclose(np.sort(np.asarray(topv)),
+                               np.sort(np.asarray(v))[-N:])
+
+
+@requires_multidevice
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mesh_topn_rand_exact(seed):
+    rs = np.random.default_rng(seed)
+    m, N = 4000, 16
+    v = jnp.asarray(rs.permutation(m).astype(np.float32) + 1)
+    r = engine_prune("topn_rand", v, mode="mesh", shards=8, d=64, w=8,
+                     seed=seed)
+    topv, _ = core.master_complete_topn(v, r.keep, N)
+    np.testing.assert_allclose(np.sort(np.asarray(topv)),
+                               np.sort(np.asarray(v))[-N:])
+
+
+@requires_multidevice
+@pytest.mark.parametrize("policy", ["lru", "fifo"])
+def test_mesh_distinct_no_value_lost(policy):
+    rs = np.random.default_rng(3)
+    vals = jnp.asarray(rs.integers(1, 250, 2999).astype(np.uint32))
+    r = engine_prune("distinct", vals, mode="mesh", shards=8, d=32, w=4,
+                     policy=policy)
+    got = core.master_complete_distinct(vals, r.keep)
+    out = set(np.asarray(vals)[np.asarray(got)].tolist())
+    assert out == set(np.asarray(vals).tolist())
+    opt = core.opt_keep_distinct(vals)
+    assert bool(jnp.all(r.keep | ~opt)), "pruned a true first occurrence"
+
+
+@requires_multidevice
+@pytest.mark.parametrize("score", ["aph", "sum"])
+def test_mesh_skyline_exact(score):
+    rs = np.random.default_rng(6)
+    pts = jnp.asarray(rs.integers(1, 400, (1501, 3)).astype(np.float32))
+    r = engine_prune("skyline", pts, mode="mesh", shards=8, w=8,
+                     score=score)
+    sky = core.skyline_oracle(pts)
+    assert bool(jnp.all(r.keep | ~sky)), "pruned a true skyline point"
+    assert bool(jnp.all(core.master_complete_skyline(pts, r.keep) == sky))
+
+
+@requires_multidevice
+@pytest.mark.parametrize("agg", ["sum", "count", "min", "max"])
+def test_mesh_groupby_exact(agg):
+    rs = np.random.default_rng(8)
+    keys = jnp.asarray(rs.integers(0, 40, 2998).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 50, 2998).astype(np.int32))
+    r = engine_prune("groupby", keys, vals, mode="mesh", shards=16,
+                     d=16, w=4, agg=agg)
+    got = core.master_complete_groupby(r, agg)
+    want = core.groupby_oracle(keys, vals, agg)
+    assert set(got) == set(want)
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-2 * max(1, abs(want[k]))
+
+
+@requires_multidevice
+def test_mesh_having_exact():
+    rs = np.random.default_rng(9)
+    keys = jnp.asarray(rs.integers(0, 50, 3001).astype(np.uint32))
+    vals = jnp.asarray(rs.integers(1, 9, 3001).astype(np.int32))
+    thr = 150
+    r = engine_prune("having", keys, vals, mode="mesh", shards=8,
+                     threshold=thr, rows=3, width=256)
+    assert core.master_complete_having(keys, vals, r.keep, thr) \
+        == core.having_oracle(keys, vals, thr)
+
+
+# -------------------------------------------------- structural guarantees
+@requires_multidevice
+@pytest.mark.parametrize("algo,mk,params", [
+    ("topn_det", lambda rs: jnp.asarray(
+        (rs.random(2000) * 1e4 + 1).astype(np.float32)),
+     dict(N=10, w=5)),
+    ("distinct", lambda rs: jnp.asarray(
+        rs.integers(1, 200, 2000).astype(np.uint32)),
+     dict(d=32, w=4)),
+    ("skyline", lambda rs: jnp.asarray(
+        rs.integers(1, 300, (2000, 3)).astype(np.float32)),
+     dict(w=6)),
+])
+def test_mesh_mask_equals_two_pass(algo, mk, params):
+    """The device count spreads lanes; it never changes the answer."""
+    rs = np.random.default_rng(11)
+    x = mk(rs)
+    a = engine_prune(algo, x, mode="two_pass", shards=8,
+                     apply_block=None, **params).keep
+    b = engine_prune(algo, x, mode="mesh", shards=8,
+                     apply_block=None, **params).keep
+    assert bool(jnp.all(a == b))
+
+
+@pytest.mark.parametrize("algo,mk,params", [
+    ("distinct", lambda rs: jnp.asarray(
+        rs.integers(1, 300, 4001).astype(np.uint32)),
+     dict(d=32, w=4)),
+    ("skyline", lambda rs: jnp.asarray(
+        rs.integers(1, 200, (1501, 3)).astype(np.float32)),
+     dict(w=6)),
+])
+@pytest.mark.parametrize("block", [64, 100, 4096])
+def test_chunked_apply_equals_unchunked(algo, mk, params, block):
+    """lax.map block filtering is exact — it only bounds the [S·n, S·w]
+    intermediate, the per-entry compare is elementwise."""
+    rs = np.random.default_rng(12)
+    x = mk(rs)
+    a = engine_prune(algo, x, mode="two_pass", shards=5, **params).keep
+    b = engine_prune(algo, x, mode="two_pass", shards=5,
+                     apply_block=block, **params).keep
+    assert bool(jnp.all(a == b))
+
+
+@requires_multidevice
+def test_mesh_non_divisible_lanes_use_divisor_submesh():
+    """Explicit S that no device count divides still runs (1-device
+    submesh), with the same mask as two_pass."""
+    rs = np.random.default_rng(13)
+    v = jnp.asarray((rs.random(1000) * 100 + 1).astype(np.float32))
+    a = engine_prune("topn_det", v, mode="two_pass", shards=5, N=9, w=5)
+    b = engine_prune("topn_det", v, mode="mesh", shards=5, N=9, w=5)
+    assert bool(jnp.all(a.keep == b.keep))
+
+
+@requires_multidevice
+def test_mesh_explicit_mesh_validates_divisibility():
+    mesh = core.default_mesh("shards")
+    v = jnp.ones(100, jnp.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        engine_prune("topn_det", v, mode="mesh", shards=5, mesh=mesh,
+                     N=2, w=4)
+
+
+@requires_multidevice
+def test_mesh_auto_shards_resolves_and_records_costs():
+    rs = np.random.default_rng(14)
+    v = jnp.asarray((rs.random(4096) * 1e4 + 1).astype(np.float32))
+    ndev = len(jax.devices())
+    r = engine_prune("topn_det", v, mode="mesh", shards="auto", N=20, w=6)
+    topv, _ = core.master_complete_topn(v, r.keep, 20)
+    np.testing.assert_allclose(np.sort(np.asarray(topv)),
+                               np.sort(np.asarray(v))[-20:])
+    assert "topn_det" in MEASURED_MERGE_COSTS
+    assert MEASURED_MERGE_COSTS["topn_det"] > 0
+    # auto lane counts divide evenly over the mesh axis
+    s = core.engine._resolve_shards(
+        "topn_det", (v,), dict(N=20, w=6), "mesh", "auto", ndev)
+    assert s % ndev == 0 and s <= v.shape[0]
+
+
+def test_mesh_jittable():
+    rs = np.random.default_rng(15)
+    v = jnp.asarray((rs.random(1024) * 100 + 1).astype(np.float32))
+    fn = jax.jit(lambda x: engine_prune("topn_det", x, mode="mesh",
+                                        shards=8, N=8, w=5).keep)
+    assert bool(jnp.all(fn(v) == engine_prune(
+        "topn_det", v, mode="mesh", shards=8, N=8, w=5).keep))

@@ -75,7 +75,7 @@ def test_skyline_superset_safety(D, seed):
 # duplicate delivery) — completes to the exact sequential answer.
 # Parametrized (not hypothesis) so they run without hypothesis installed.
 
-@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("mode", ["sharded", "two_pass", "mesh"])
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_engine_topn_superset_safety(mode, seed):
     rs = np.random.default_rng(seed)
@@ -91,7 +91,7 @@ def test_engine_topn_superset_safety(mode, seed):
                                np.sort(np.asarray(v))[-N:])
 
 
-@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("mode", ["sharded", "two_pass", "mesh"])
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 def test_engine_distinct_superset_safety(mode, seed):
     rs = np.random.default_rng(seed)
@@ -104,7 +104,7 @@ def test_engine_distinct_superset_safety(mode, seed):
     assert out == set(np.asarray(vals).tolist())
 
 
-@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("mode", ["sharded", "two_pass", "mesh"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_engine_skyline_superset_safety(mode, seed):
     rs = np.random.default_rng(seed)
@@ -118,7 +118,7 @@ def test_engine_skyline_superset_safety(mode, seed):
     assert bool(jnp.all(a == core.skyline_oracle(pts)))
 
 
-@pytest.mark.parametrize("mode", ["sharded", "two_pass"])
+@pytest.mark.parametrize("mode", ["sharded", "two_pass", "mesh"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_engine_groupby_merge_safety(mode, seed):
     """GROUP BY's 'superset' is over emitted partials + merged state:
