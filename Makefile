@@ -2,10 +2,16 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-smoke clean
+.PHONY: verify test bench bench-smoke bench-gate distributed-smoke clean
 
 verify:
 	scripts/verify.sh
+
+bench-gate:  # fresh --smoke vs committed BENCH_results.json (>3x fails)
+	$(PYTHON) scripts/bench_gate.py
+
+distributed-smoke:  # 2-process jax.distributed mesh smoke (CI job)
+	$(PYTHON) scripts/ci_distributed_smoke.py
 
 test:
 	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
@@ -19,6 +25,7 @@ bench-smoke:
 	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
 	  $(PYTHON) -m benchmarks.bench_engine --smoke
 
-clean:
+clean:  # compiled artifacts are never tracked (.gitignore + verify guard)
 	find . -name __pycache__ -type d -prune -exec rm -rf {} +
+	find . -name '*.pyc' -delete
 	rm -rf .pytest_cache

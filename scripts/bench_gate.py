@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""Bench regression gate: fresh --smoke numbers vs BENCH_results.json.
+
+Runs ``benchmarks.bench_engine`` in smoke mode (every stream shrunk to
+2^12 entries, seconds of wall time) and compares each timed ``engine_*``
+row against the committed full-size numbers. A smoke run is *strictly
+smaller* work than the committed full-size run of the same row, so a
+fresh smoke time exceeding ``THRESHOLD`` x the committed time can only
+mean a real regression — a recompile storm, an accidental O(m^2), a
+collective gone sequential — not noise from the smaller m. The
+threshold is deliberately tolerant (CI runners are noisy and share
+cores); this gate catches order-of-magnitude breakage, the full
+``make bench`` trajectory in BENCH_results.json catches drift.
+
+Derived rows (``*_x`` ratios, ``*_auto_shards`` lane counts) are
+dimensionless, not wall-clock, and are skipped by the 3x rule — except
+``*_speedup_x`` rows for collective-free modes, which are within-run
+and machine-independent enough for a floor: two_pass is the same vmap
+body with S-times fewer scan steps, so running *slower than the
+sequential scan* (ratio < 1) is breakage on any host at any m, even
+though the multiplier itself swings with core count. Mesh ratios are
+exempt — at smoke m the shard_map collective overhead floor
+legitimately eats the step-count win (observed 0.9x at m=2^12 vs 2.6x
+at the committed m=2^20). Rows with no committed
+baseline (newly added benches) are reported but never fail the gate.
+
+Usage: python scripts/bench_gate.py  (from the repo root; sets its own
+PYTHONPATH and the 8-device CPU platform, same as scripts/verify.sh)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+THRESHOLD = 3.0
+
+# must precede any jax import (bench rows depend on the device count)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+
+def is_wall_clock(name: str) -> bool:
+    """Timed rows only: ratios/lane-counts are not microseconds."""
+    return not (name.endswith("_x") or name.endswith("_shards"))
+
+
+def main() -> int:
+    committed_path = ROOT / "BENCH_results.json"
+    if not committed_path.exists():
+        print("bench_gate: no committed BENCH_results.json — nothing to "
+              "gate against")
+        return 0
+    committed = json.loads(committed_path.read_text())
+
+    from benchmarks import bench_engine, common
+
+    print("bench_gate: running bench_engine --smoke ...")
+    bench_engine.run(smoke=True)
+    fresh = dict(common.RESULTS)
+
+    failures, new_rows = [], []
+    # floor only the collective-free ratios: mesh pays a shard_map
+    # overhead floor that legitimately loses to scan at smoke m
+    speedup_failures = [
+        (name, x) for name, x in sorted(fresh.items())
+        if name.startswith("engine_") and name.endswith("_speedup_x")
+        and "mesh" not in name and x < 1.0]
+    for name, x in speedup_failures:
+        print(f"bench_gate: {name}: {x:.2f}x — parallel mode slower "
+              f"than the sequential scan FAIL")
+    for name, us in sorted(fresh.items()):
+        if not (name.startswith("engine_") and is_wall_clock(name)):
+            continue
+        base = committed.get(name)
+        if base is None:
+            new_rows.append(name)
+            continue
+        ratio = us / base if base > 0 else float("inf")
+        status = "FAIL" if ratio > THRESHOLD else "ok"
+        print(f"bench_gate: {name}: smoke {us:.1f}us vs committed "
+              f"{base:.1f}us ({ratio:.2f}x) {status}")
+        if ratio > THRESHOLD:
+            failures.append((name, us, base, ratio))
+    for name in new_rows:
+        print(f"bench_gate: {name}: no committed baseline (new row) — "
+              "skipped")
+
+    if failures:
+        print(f"\nbench_gate: {len(failures)} row(s) regressed more than "
+              f"{THRESHOLD}x vs the committed full-size numbers:")
+        for name, us, base, ratio in failures:
+            print(f"  {name}: {us:.1f}us smoke > {THRESHOLD}x committed "
+                  f"{base:.1f}us ({ratio:.2f}x)")
+    if speedup_failures:
+        print(f"\nbench_gate: {len(speedup_failures)} speedup row(s) "
+              "below 1x — a parallel mode is slower than the scan:")
+        for name, x in speedup_failures:
+            print(f"  {name}: {x:.2f}x")
+    if failures or speedup_failures:
+        return 1
+    print("bench_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""2-process jax.distributed CPU smoke for the mesh engine (CI).
+
+The tier-1 suite exercises the mesh backend on a single-process
+8-device platform, where shard_map "collectives" never leave the
+process. This smoke is the per-commit stand-in for the ROADMAP's "true
+multi-host mesh run": two OS processes (4 forced CPU devices each, 8
+global) joined via ``jax.distributed`` + gloo CPU collectives, running
+a minimal ``mode="mesh"`` TOP-N query both with the master-side apply
+and with the mesh-resident pass 2 — so the pass-1 state all-gather and
+the resident broadcast genuinely cross process boundaries.
+
+Checks: both placements produce the same mask, the mask is a superset
+of the true top-N (completion recovers the exact answer), and the
+resident mask's addressable shards per process cover only that
+process's devices.
+
+Usage:
+  python scripts/ci_distributed_smoke.py            # parent: spawns 2 workers
+  python scripts/ci_distributed_smoke.py --worker I # internal
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+NUM_PROCESSES = 2
+DEVICES_PER_PROCESS = 4
+M, N, SHARDS = 4096, 32, 8
+
+
+def worker(process_id: int, port: int) -> None:
+    # both knobs must be set before the backend initializes
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={DEVICES_PER_PROCESS}"
+    ).strip()
+    import jax
+
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(
+        coordinator_address=f"localhost:{port}",
+        num_processes=NUM_PROCESSES, process_id=process_id)
+
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import engine_prune, unshard_mask
+
+    ndev = len(jax.devices())
+    assert ndev == NUM_PROCESSES * DEVICES_PER_PROCESS, ndev
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("shards",))
+
+    # every process holds the same host copy; the device data is built
+    # shard-by-shard so no process ever owns the other's slice
+    host = (np.random.default_rng(0).random(M) * 1e6 + 1).astype(
+        np.float32)
+    v = jax.make_array_from_callback(
+        (M,), NamedSharding(mesh, P("shards")), lambda idx: host[idx])
+
+    masks = {}
+    for p2 in ("master", "mesh"):
+        fn = jax.jit(lambda x, p2=p2: engine_prune(
+            "topn_det", x, mode="mesh", shards=SHARDS, mesh=mesh,
+            pass2=p2, N=N, w=8).keep)
+        keep = fn(v)
+        if p2 == "mesh":
+            # resident: this process only materializes its own lanes
+            local = sum(s.data.size for s in keep.addressable_shards)
+            assert local == M // NUM_PROCESSES, local
+            keep = unshard_mask(keep, M)
+        # replicate the flat mask (O(m) bools — the only gather) so the
+        # host-side oracle check below can read it
+        keep = jax.jit(jnp.asarray,
+                       out_shardings=NamedSharding(mesh, P()))(keep)
+        masks[p2] = np.asarray(keep)
+
+    assert (masks["master"] == masks["mesh"]).all(), \
+        "pass-2 placement changed the mask across processes"
+    survivors = host[masks["mesh"]]
+    want = np.sort(host)[-N:]
+    assert np.isin(want, survivors).all(), "pruned a true top-N entry"
+    print(f"worker {process_id}: OK (mask equal across placements, "
+          f"top-{N} superset holds, kept {int(masks['mesh'].sum())}/{M})")
+
+
+def main() -> int:
+    if "--worker" in sys.argv:
+        worker(int(sys.argv[sys.argv.index("--worker") + 1]),
+               int(os.environ["SMOKE_PORT"]))
+        return 0
+
+    with socket.socket() as s:  # free port for the coordinator
+        s.bind(("localhost", 0))
+        port = s.getsockname()[1]
+    env = dict(os.environ, SMOKE_PORT=str(port))
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    procs = [subprocess.Popen(
+        [sys.executable, __file__, "--worker", str(i)], env=env, cwd=ROOT)
+        for i in range(NUM_PROCESSES)]
+    try:
+        codes = [p.wait(timeout=600) for p in procs]
+    except subprocess.TimeoutExpired:
+        # a hung worker (e.g. the coordinator port got sniped between
+        # probe and bind) must not orphan its sibling into the job
+        # timeout — kill the whole set and fail cleanly
+        for p in procs:
+            p.kill()
+        print("distributed smoke: FAILED (worker timeout; all killed)")
+        return 1
+    if any(codes):
+        print(f"distributed smoke: FAILED (exit codes {codes})")
+        return 1
+    print("distributed smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,13 +19,14 @@ from .skyline import (skyline_prune, skyline_oracle, opt_keep_skyline,
 from .groupby import groupby_prune, master_complete_groupby, groupby_oracle
 from .filter import (Pred, And, Or, TRUE, relax, filter_prune, evaluate,
                      evaluate_truthtable, master_complete_filter)
-from .engine import (ALGORITHMS, MODES, DistinctMerged, TopNDetMerged,
-                     calibrate_merge_cost, default_mesh, engine_prune,
-                     merge_states, shard_stack)
+from .engine import (ALGORITHMS, MODES, PASS2, DistinctMerged,
+                     TopNDetMerged, apply_merged, calibrate_merge_cost,
+                     default_mesh, engine_prune, merge_states,
+                     shard_stack, unshard_mask)
 from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       pack_queries, rule_count, PackingPlan,
                       MultiSwitchPlan, plan_multi_switch, optimal_shards,
-                      MEASURED_MERGE_COSTS)
+                      optimal_pass2, pass2_time, MEASURED_MERGE_COSTS)
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

@@ -42,13 +42,35 @@ Execution modes → the paper's deployment story:
     paper's §9 multi-rack deployment (one pruning switch per ToR)
     mapped to one accelerator per group of switch lanes. Pass 1 runs
     each shard's scan body inside ``shard_map`` (S lanes split evenly
-    over the mesh axis, vmapped within each device), the per-shard
-    states are all-gathered at the master, folded with the same
-    ``merge_states`` combinators, and pass 2 applies the merged state
-    as the scan-free filter. With the default mesh the keep mask is
-    identical to ``two_pass`` at the same S (lane count is the semantic
-    parameter; the device count only spreads the lanes); an explicit
-    mesh requires ``shards`` to be a multiple of its axis size.
+    over the mesh axis, vmapped within each device). Where pass 2 runs
+    is the ``pass2`` parameter:
+
+    ``pass2="master"`` (default) gathers the per-shard states *and*
+    keep masks to the master, folds the states with ``merge_states``,
+    and applies the merged state there — the master touches the full
+    [S, n] stream again, costing m·f filter work.
+
+    ``pass2="mesh"`` keeps pass 2 resident on the data path (the
+    paper's multi-rack principle: only compact state moves upward).
+    Inside the same ``shard_map``, the per-lane states are all-gathered
+    across the mesh axis — state_bytes·D wire traffic, the only thing
+    that leaves a device — every device folds them into the identical
+    merged state (the broadcast), and applies the scan-free filter
+    (chunked via ``apply_block`` for DISTINCT/SKYLINE) to its own
+    resident m/D entries. The keep mask comes back **device-sharded in
+    the stacked [S, n] layout** (use ``unshard_mask(keep, m)`` for the
+    flat mask — an O(m)-bool gather, never the entry stream); the
+    master's peak materialization is O(m/D + S·state), not O(m).
+
+    ``pass2="auto"`` picks the placement from the planner's cost rule:
+    master-apply m·f vs broadcast state_bytes·D + (m/D)·f
+    (``planner.optimal_pass2``).
+
+    Either placement yields the exact same mask bits: with the default
+    mesh the keep mask is identical to ``two_pass`` at the same S (lane
+    count is the semantic parameter; the device count only spreads the
+    lanes); an explicit mesh requires ``shards`` to be a multiple of
+    its axis size.
 
 Memory note: the DISTINCT/SKYLINE pass-2 filters compare every entry
 against the S·w-column merged state — an [S·n, S·w] intermediate that
@@ -98,6 +120,10 @@ from . import planner
 MODES = ("scan", "sharded", "two_pass", "mesh")
 ALGORITHMS = ("topn_det", "topn_rand", "distinct", "skyline", "groupby",
               "having")
+# pass-2 placements for mode="mesh": apply the merged state at the
+# master (full-stream filter), on each device's resident shard, or let
+# the planner's cost rule choose (planner.optimal_pass2)
+PASS2 = ("master", "mesh", "auto")
 
 # pass-2 chunk size used when mode="mesh" and the caller didn't pick one
 # (only consulted for the chunkable algorithms, DISTINCT / SKYLINE)
@@ -237,7 +263,13 @@ def _distinct_apply(merged, streams, keep1, p):
     rows = hash_mod(x, p["d"], seed=p.get("seed", 0))
     slots_g = merged.slots[rows]  # [S, n, S*w]
     valid_g = merged.valid[rows]
-    sidx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None, None]
+    # the "lower-ranked shard owns it" test needs *global* lane ranks:
+    # a resident pass 2 only sees its device's lanes, so the caller
+    # passes their global ids; at the master the leading axis is global
+    lanes = p.get("_lane_ids")
+    if lanes is None:
+        lanes = jnp.arange(x.shape[0], dtype=jnp.int32)
+    sidx = lanes[:, None, None]
     dup_lower = jnp.any((slots_g == x[..., None]) & valid_g
                         & (merged.shard[None, None, :] < sidx), axis=-1)
     return keep1 & ~dup_lower
@@ -438,6 +470,16 @@ def _mesh_for_shards(shards: int, axis: str):
     return default_mesh(axis, d)
 
 
+def _mesh_lanes(shards: int, ndev: int) -> int:
+    """Lanes per device (S/D); the one place the mesh modes validate
+    that an explicit mesh's axis size divides the lane count."""
+    if shards % ndev:
+        raise ValueError(
+            f"mode='mesh' needs shards divisible by the mesh axis size "
+            f"({shards} lanes over {ndev} devices); use shards='auto'")
+    return shards // ndev
+
+
 def _mesh_pass1(spec: _AlgoSpec, shard_streams, params, mesh, axis: str):
     """Pass 1 on the device mesh: S lanes split over the mesh axis.
 
@@ -446,16 +488,104 @@ def _mesh_pass1(spec: _AlgoSpec, shard_streams, params, mesh, axis: str):
     keep masks / emissions) back to the caller — the master — in the
     same [S, ...] stacked layout the single-device vmap produces.
     """
-    ndev = mesh.shape[axis]
-    shards = shard_streams[0].shape[0]
-    if shards % ndev:
-        raise ValueError(
-            f"mode='mesh' needs shards divisible by the mesh axis size "
-            f"({shards} lanes over {ndev} devices); use shards='auto'")
+    _mesh_lanes(shard_streams[0].shape[0], mesh.shape[axis])
     worker = lambda *local: jax.vmap(
         lambda *sh: spec.scan(sh, params))(*local)
     sm = compat.shard_map(worker, mesh, P(axis), P(axis))
     return sm(*shard_streams)
+
+
+def _mesh_two_pass_resident(spec: _AlgoSpec, shard_streams, params, mesh,
+                            axis: str, apply_block: int | None):
+    """Both passes on the mesh: the master never touches the stream.
+
+    One ``shard_map`` covers pass 1 *and* pass 2. Each device scans its
+    resident S/D lanes, ``all_gather``s only the compact per-lane states
+    across the mesh axis (state_bytes·D wire bytes — the paper's
+    "ship state upward, not entries"), folds them into the merged state
+    locally (every device computes the identical fold: that *is* the
+    broadcast, with the gather and the broadcast fused into one
+    collective), and applies the scan-free filter to its own resident
+    entries. ``out_specs=P(axis)`` keeps the keep mask device-sharded in
+    the stacked [S, n] layout; only the merged state (replicated, O(S·
+    state)) and the emissions come back whole.
+    """
+    ndev = mesh.shape[axis]
+    lanes = _mesh_lanes(shard_streams[0].shape[0], ndev)
+    # the output structure (does this algorithm emit?) must be known
+    # before tracing the shard_map body, so probe it shape-only
+    local_shapes = tuple(
+        jax.ShapeDtypeStruct((lanes,) + s.shape[1:], s.dtype)
+        for s in shard_streams)
+    r1_shape = jax.eval_shape(
+        lambda *sh: jax.vmap(lambda *x: spec.scan(x, params))(*sh),
+        *local_shapes)
+    has_emitted = r1_shape.emitted is not None
+
+    def worker(*local):
+        r1 = jax.vmap(lambda *sh: spec.scan(sh, params))(*local)
+        gathered = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True),
+            r1.state)
+        merged = spec.merge(gathered, params)
+        lane0 = jax.lax.axis_index(axis) * lanes
+        p2 = dict(params,
+                  _lane_ids=lane0 + jnp.arange(lanes, dtype=jnp.int32))
+        if apply_block and spec.chunkable \
+                and apply_block < local[0].shape[1]:
+            keep2 = _apply_chunked(spec, merged, local, r1.keep, p2,
+                                   apply_block)
+        else:
+            keep2 = spec.apply(merged, local, r1.keep, p2)
+        return ((keep2, merged, r1.emitted) if has_emitted
+                else (keep2, merged))
+
+    out_specs = (P(axis), P()) + ((P(axis),) if has_emitted else ())
+    sm = compat.shard_map(worker, mesh, P(axis), out_specs)
+    out = sm(*shard_streams)
+    emitted = None
+    if has_emitted:
+        emitted = jax.tree_util.tree_map(
+            lambda e: e.reshape((-1,) + e.shape[2:]), out[2])
+    return out[0], out[1], emitted
+
+
+def unshard_mask(keep: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Stacked [S, n] keep mask (possibly device-sharded) -> flat bool[m].
+
+    The inverse of ``shard_stack`` for masks: concatenate the lanes in
+    stream order and drop the tail pads. This is the only gather a
+    ``pass2="mesh"`` consumer ever needs — O(m) mask bools cross to the
+    master, never the entry stream itself.
+    """
+    return _unshard(keep, m)
+
+
+def apply_merged(algo: str, merged, shard_streams, keep1, **params):
+    """The scan-free pass-2 filter body for `algo` on stacked lanes.
+
+    keep = filter(merged_state, entries) — elementwise over entries, no
+    positional state. Exposed because three callers share it: the
+    master-side two_pass/mesh apply, the per-device resident pass 2
+    (``pass2="mesh"``), and the jnp mirrors of the Pallas grid-parallel
+    kernels (``kernels.parallel.*_parallel_ref``). ``keep1`` is the
+    pass-1 mask (only DISTINCT and GROUP BY consult it).
+    """
+    return _SPECS[algo].apply(merged, tuple(shard_streams), keep1, params)
+
+
+def _per_shard_state_bytes(spec: _AlgoSpec, shard_streams, params) -> int:
+    """Shape-only probe of one lane's switch-state footprint.
+
+    The planner's pass-2 placement rule charges the *merged* S-lane
+    state (that is what the resident broadcast ships), so callers scale
+    this by the lane count before handing it to ``optimal_pass2``."""
+    shapes = jax.eval_shape(
+        lambda *sh: jax.vmap(lambda *x: spec.scan(x, params))(*sh).state,
+        *shard_streams)
+    total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(shapes))
+    return total // shard_streams[0].shape[0]
 
 
 def merge_states(algo: str, stacked_states, **params):
@@ -584,7 +714,7 @@ def _resolve_shards(algo: str, streams, params, mode: str, shards,
 def engine_prune(algo: str, *streams, mode: str = "scan",
                  shards: int | str | None = None, mesh=None,
                  mesh_axis: str = "shards", apply_block: int | None = None,
-                 **params) -> PruneResult:
+                 pass2: str = "master", **params) -> PruneResult:
     """Run pruner `algo` over its stream(s) in the requested mode.
 
     streams: the algorithm's data arrays, all sharing leading dim m
@@ -608,13 +738,26 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     mesh mode, where large S is the point and the [S·n, S·w] compare
     would otherwise bound it.
 
+    pass2: where mode="mesh" applies the merged state — ``"master"``
+    (gather everything, filter the full stream there), ``"mesh"``
+    (broadcast the merged state, filter each device's resident shard;
+    the keep mask stays device-sharded in the stacked [S, n] layout —
+    flatten with ``unshard_mask``), or ``"auto"`` (the planner's
+    m·f vs state_bytes·D + (m/D)·f placement rule).
+
     Returns a PruneResult whose keep mask is over the original m
-    entries. state is the stacked per-shard states (`sharded`), the
+    entries (stacked [S, n] over the padded stream when pass2 resolves
+    to "mesh"). state is the stacked per-shard states (`sharded`), the
     merged global state (`two_pass`/`mesh`), or the final scan state
     (`scan`).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if pass2 not in PASS2:
+        raise ValueError(f"pass2 must be one of {PASS2}, got {pass2!r}")
+    if pass2 != "master" and mode != "mesh":
+        raise ValueError(
+            f"pass2={pass2!r} only applies to mode='mesh' (got {mode!r})")
     spec = _SPECS[algo]  # KeyError = unknown algorithm
     streams = tuple(s for s in streams if s is not None)
     m = streams[0].shape[0]
@@ -625,7 +768,10 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     else:
         ndev = 1
     shards = _resolve_shards(algo, streams, params, mode, shards, ndev)
-    if mode == "scan" or shards <= 1:
+    if mode == "scan" or (shards <= 1 and mode != "mesh"):
+        # mesh keeps its documented output contract even at S=1 (the
+        # degenerate 1-lane mesh: stacked mask, merged state) instead of
+        # silently returning the scan's flat mask and raw scan state
         return spec.scan(streams, params)
     if shards > m:
         raise ValueError(f"shards={shards} exceeds stream length {m}")
@@ -641,6 +787,21 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
              else (0,) * len(streams))
     shard_streams = tuple(shard_stack(s, shards, f)
                           for s, f in zip(streams, fills))
+    if apply_block is None and mode == "mesh" and spec.chunkable:
+        apply_block = DEFAULT_MESH_APPLY_BLOCK
+
+    if mode == "mesh" and pass2 == "auto":
+        # the broadcast ships the merged state: S x the per-lane bytes
+        # (same units as plan_multi_switch's merge_bytes)
+        state_bytes = shards * _per_shard_state_bytes(
+            spec, shard_streams, params)
+        pass2 = planner.optimal_pass2(m, mesh.shape[mesh_axis],
+                                      state_bytes)
+    if mode == "mesh" and pass2 == "mesh":
+        keep2, merged, emitted = _mesh_two_pass_resident(
+            spec, shard_streams, params, mesh, mesh_axis, apply_block)
+        return PruneResult(keep=keep2, state=merged, emitted=emitted)
+
     if mode == "mesh":
         r1 = _mesh_pass1(spec, shard_streams, params, mesh, mesh_axis)
     else:
@@ -657,8 +818,6 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
                            emitted=emitted)
 
     merged = spec.merge(r1.state, params)
-    if apply_block is None and mode == "mesh" and spec.chunkable:
-        apply_block = DEFAULT_MESH_APPLY_BLOCK
     if apply_block and spec.chunkable \
             and apply_block < shard_streams[0].shape[1]:
         keep2 = _apply_chunked(spec, merged, shard_streams, r1.keep,

@@ -162,7 +162,9 @@ MEASURED_MERGE_COSTS: dict[str, float] = {}
 
 def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
                       shards: int,
-                      profile: SwitchProfile | None = None) -> MultiSwitchPlan:
+                      profile: SwitchProfile | None = None,
+                      ndev: int = 1,
+                      pass2: str | None = None) -> MultiSwitchPlan:
     """Model running `queries` over an m-entry stream on S switch replicas.
 
     Every replica must fit the full query set (same packing problem as a
@@ -171,6 +173,12 @@ def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
     ceil(m/S) entries of streaming work plus the master's fold over the
     S shipped states: T(S) = m/S + c·S·state_bytes. Diminishing returns
     appear once the merge term dominates — see `optimal_shards`.
+
+    ``pass2`` adds the engine's merged-state filter to T(S):
+    ``"master"`` / ``"mesh"`` charge the corresponding ``pass2_time``
+    over ``ndev`` devices, ``"auto"`` charges the cheaper of the two,
+    and ``None`` (default) models a pass-2-free workload (the
+    historical behavior: GROUP BY-style all-absorbing pruners).
     """
     if shards < 1:
         raise ValueError("shards must be >= 1")
@@ -181,10 +189,61 @@ def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
     entries = math.ceil(m / shards)
     merge_bytes = shards * state_bytes
     t_parallel = entries + _MERGE_BYTE_COST * merge_bytes
+    if pass2 is not None:
+        placement = (optimal_pass2(m, ndev, merge_bytes)
+                     if pass2 == "auto" else pass2)
+        t_parallel += pass2_time(m, ndev, merge_bytes, placement)
     return MultiSwitchPlan(
         shards=shards, per_switch=plan, entries_per_switch=entries,
         merge_bytes=merge_bytes,
         est_speedup=m / t_parallel, feasible=True)
+
+
+def pass2_time(m: int, ndev: int, state_bytes: int, placement: str,
+               apply_entry_cost: float = 1.0,
+               broadcast_byte_cost: float | None = None) -> float:
+    """Pass-2 term of T(S), in per-entry stream-work units.
+
+    ``"master"``: the merged-state filter runs where the states were
+    gathered — the master streams all m entries through it: m·f.
+
+    ``"mesh"``: the merged state (state_bytes ≈ S·per-lane bytes) is
+    broadcast to all D devices — state_bytes·D wire work at the same
+    per-byte cost c as the pass-1 state shipping — and each device
+    filters only its resident m/D entries: state_bytes·D·c + (m/D)·f.
+
+    f (``apply_entry_cost``) is the per-entry filter cost relative to
+    one entry of pass-1 streaming; the scan-free applies are cheaper
+    per entry than the scan body, so 1.0 is a conservative default.
+    """
+    if broadcast_byte_cost is None:
+        broadcast_byte_cost = _MERGE_BYTE_COST
+    if placement == "master":
+        return m * apply_entry_cost
+    if placement == "mesh":
+        return (state_bytes * ndev * broadcast_byte_cost
+                + (m / ndev) * apply_entry_cost)
+    raise ValueError(f"placement must be 'master' or 'mesh', "
+                     f"got {placement!r}")
+
+
+def optimal_pass2(m: int, ndev: int, state_bytes: int,
+                  apply_entry_cost: float = 1.0,
+                  broadcast_byte_cost: float | None = None) -> str:
+    """Pick the pass-2 placement: master-apply m·f vs broadcast
+    state_bytes·D + (m/D)·f.
+
+    With one device there is nothing to spread — master. Otherwise the
+    resident apply wins unless the merged state is so large that
+    re-broadcasting it to D devices outweighs filtering (D-1)/D of the
+    stream off the master. Used by ``engine_prune(pass2="auto")``.
+    """
+    if ndev <= 1:
+        return "master"
+    args = (apply_entry_cost, broadcast_byte_cost)
+    return ("mesh" if pass2_time(m, ndev, state_bytes, "mesh", *args)
+            < pass2_time(m, ndev, state_bytes, "master", *args)
+            else "master")
 
 
 def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096,

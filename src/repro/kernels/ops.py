@@ -4,6 +4,14 @@ On TPU the Pallas kernels run compiled (interpret=False); elsewhere they
 run in interpret mode so the *kernel bodies* execute (and are validated)
 on CPU. `use_ref=True` routes to the pure-jnp oracles in ref.py (same
 block semantics) — used for differential testing and as a safe fallback.
+
+The two-pass `*_prune_parallel` entry points mirror the engine's
+two_pass/mesh structure kernel-side: grid-parallel pass-1 state
+replicas, a plain-XLA merge, and a grid-parallel scan-free apply. Their
+`use_ref` mirrors share the apply bodies with ``core.engine`` (via
+``apply_merged``) — the same per-device filter the engine's
+mesh-resident pass 2 (``engine_prune(..., pass2="mesh")``) runs on each
+device's resident shard.
 """
 from __future__ import annotations
 

@@ -22,9 +22,13 @@ serializes. Here each grid program owns a *state replica* for one shard
 
 Every kernel has a pure-jnp mirror (vmapped block oracles from ref.py +
 the same merge/apply math) used for differential testing and as the
-CPU-fallback `use_ref` path in ops.py. Correctness contract matches
-repro.core.engine two_pass: keep masks are supersets of the minimal
-correct survivor set, not of the sequential scan's mask.
+CPU-fallback `use_ref` path in ops.py. The mirrors' pass 2 is the
+engine's own scan-free filter body (``core.engine.apply_merged``) — the
+identical code that runs per device in the engine's mesh-resident
+pass 2 — so kernel, mirror and engine can never drift apart.
+Correctness contract matches repro.core.engine two_pass: keep masks are
+supersets of the minimal correct survivor set, not of the sequential
+scan's mask.
 
 VMEM budget per program: the same d×w state as the sequential kernels
 plus one B-entry chunk — the shard length only affects how many chunks
@@ -138,15 +142,18 @@ def topn_apply_kernel(values: jnp.ndarray, merged: jnp.ndarray, *, d: int,
 
 
 def topn_parallel_ref(values, *, d, w, shards, block, seed=0):
-    """jnp mirror of pass1+merge+pass2 (vmapped block oracle)."""
+    """jnp mirror of pass1+merge+pass2 (vmapped block oracle; pass 2 is
+    the engine's shared filter body)."""
+    from ..core.engine import apply_merged
+    from ..core.topn import TopNRandState
+
     m = values.shape[0]
     sh = values.reshape(shards, m // shards)
     _, states = jax.vmap(lambda v: ref.topn_block_ref(
         v, d=d, w=w, block=block, seed=seed, return_state=True))(sh)
     merged = merge_topn_states(states, w)
-    n = m // shards
-    rows = hash_mod(jnp.arange(n, dtype=jnp.uint32), d, seed)
-    keep = sh.astype(jnp.float32) >= merged[:, -1][rows][None, :]
+    keep = apply_merged("topn_rand", TopNRandState(vals=merged), (sh,),
+                        None, d=d, w=w, seed=seed)
     return keep.reshape(-1).astype(jnp.int32), states
 
 
@@ -279,23 +286,23 @@ def distinct_apply_kernel(values, keep1, mlo, mhi, owner, *, d: int,
 
 
 def distinct_parallel_ref(values, *, d, w, shards, block, seed=0):
-    """jnp mirror: vmapped FIFO block oracle + the shared cache-union
-    merge (same owner-code convention as the apply kernel), applied on
-    the exact uint32 fingerprints instead of split16 halves."""
+    """jnp mirror: vmapped FIFO block oracle + the engine's cache-union
+    apply body (same "cached by a lower-ranked shard" rule as the
+    kernel's owner codes), on the exact uint32 fingerprints instead of
+    split16 halves."""
+    from ..core.engine import DistinctMerged, _cols_by_shard, apply_merged
+
     m = values.shape[0]
     sh = values.reshape(shards, m // shards)
     keep1, (slots, valid, _) = jax.vmap(lambda v: ref.distinct_block_ref(
         v, d=d, w=w, block=block, seed=seed, return_state=True))(sh)
-    lo, hi = split16(slots)
-    _, _, owner = merge_distinct_states(lo, hi, valid.astype(jnp.float32))
-    mslots = jnp.moveaxis(slots, 0, 1).reshape(d, shards * w)
-    rows = hash_mod(sh, d, seed)
-    g = mslots[rows]       # [S, n, S*w]
-    g_own = owner[rows]
-    sidx = jnp.arange(shards, dtype=jnp.float32)[:, None, None]
-    dup_lower = jnp.any((g == sh[..., None]) & (g_own > 0.5)
-                        & (g_own < sidx + 0.5), axis=-1)
-    keep = keep1.reshape(shards, -1).astype(bool) & ~dup_lower
+    merged = DistinctMerged(
+        slots=_cols_by_shard(slots),
+        valid=_cols_by_shard(valid.astype(bool)),
+        shard=jnp.repeat(jnp.arange(shards, dtype=jnp.int32), w))
+    keep = apply_merged("distinct", merged, (sh,),
+                        keep1.reshape(shards, -1).astype(bool),
+                        d=d, seed=seed)
     return keep.reshape(-1).astype(jnp.int32), (slots, valid)
 
 
@@ -407,14 +414,16 @@ def skyline_apply_kernel(points, mpoints, mscores, *, block: int = 256,
 
 
 def skyline_parallel_ref(points, *, w, shards, block, score="aph"):
-    """jnp mirror: vmapped block oracle + dominance-set apply."""
+    """jnp mirror: vmapped block oracle + the engine's dominance-set
+    apply body."""
+    from ..core.engine import apply_merged
+    from ..core.skyline import SkylineState
+
     m, D = points.shape
     sh = points.reshape(shards, m // shards, D).astype(jnp.float32)
     _, (P, S) = jax.vmap(lambda p: ref.skyline_block_ref(
         p, w=w, block=block, score=score, return_state=True))(sh)
     mp, ms = merge_skyline_states(P, S)
-    dom = (jnp.all(sh[:, :, None, :] <= mp[None, None], axis=-1)
-           & jnp.any(sh[:, :, None, :] < mp[None, None], axis=-1)
-           & (ms > NEG)[None, None, :])
-    keep = ~jnp.any(dom, axis=-1)
+    keep = apply_merged("skyline", SkylineState(points=mp, scores=ms),
+                        (sh,), None)
     return keep.reshape(-1).astype(jnp.int32), (P, S)

@@ -6,11 +6,17 @@ Deployment mapping (DESIGN.md §2):
    immediately before the gather to the master).
  * Every single-table pruner (DISTINCT / TOP-N / SKYLINE / GROUP BY /
    HAVING) executes through ``core.engine_prune`` — ``mode="mesh"``
-   when a mesh is given (one switch lane per worker, shard-local states
-   all-gathered and folded at the master, merged-state pass-2 filter),
-   ``mode="scan"`` otherwise. The engine is the single entry point for
-   scan / sharded / two_pass / mesh execution; this module only adds
-   table plumbing and master completion.
+   with ``pass2="mesh"`` when a mesh is given (one switch lane per
+   worker; shard-local states all-gathered *across the workers*, the
+   merged state broadcast back, and the pass-2 filter applied to each
+   worker's resident entries — the master never re-touches the entry
+   stream), ``mode="scan"`` otherwise. The engine hands back a
+   device-sharded stacked keep mask; this module flattens only the
+   mask (O(m) bools via ``core.unshard_mask``) for master completion
+   over the worker-resident columns it already holds. The engine is
+   the single entry point for scan / sharded / two_pass / mesh
+   execution; this module only adds table plumbing and master
+   completion.
  * JOIN keeps its bespoke two-table Bloom exchange (filters are
    mergeable: OR across workers reproduces the shared switch state
    exactly); FILTER is stateless.
@@ -50,12 +56,20 @@ def _num_workers(mesh, axis="data") -> int:
 def _engine_call(algo: str, streams: tuple, mesh, axis: str,
                  params: dict) -> core.PruneResult:
     """One engine invocation per query: mesh-backed when a mesh exists
-    (S = one lane per worker on the data axis), sequential otherwise."""
+    (S = one lane per worker on the data axis, pass 2 resident on the
+    workers), sequential otherwise. The result's keep mask is
+    normalized to the flat bool[m] layout — only the mask is gathered
+    (``unshard_mask``); the entry stream stays sharded on the workers
+    and master completion reads the columns this layer already holds.
+    """
     if mesh is None:
         return core.engine_prune(algo, *streams, mode="scan", **params)
-    return core.engine_prune(algo, *streams, mode="mesh",
-                             shards=mesh.shape[axis], mesh=mesh,
-                             mesh_axis=axis, **params)
+    r = core.engine_prune(algo, *streams, mode="mesh",
+                          shards=mesh.shape[axis], mesh=mesh,
+                          mesh_axis=axis, pass2="mesh", **params)
+    m = streams[0].shape[0]
+    return core.PruneResult(keep=core.unshard_mask(r.keep, m),
+                            state=r.state, emitted=r.emitted)
 
 
 def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:

@@ -15,7 +15,11 @@ guarantees specific to the mesh backend:
    DISTINCT/SKYLINE, which is what unbounds S beyond the [S·n, S·w]
    single-materialization limit;
  * ``shards="auto"`` resolves to a lane multiple of the mesh axis and
-   records the measured merge-cost constants in the planner.
+   records the measured merge-cost constants in the planner;
+ * mesh-resident pass 2 (``pass2="mesh"``) produces bit-identical masks
+   to the master apply for every algorithm (divisible and padded
+   S·n/D), while the mask stays device-sharded — the master's peak
+   materialization is O(m/D + S·state), never the full stream.
 """
 import jax
 import numpy as np
@@ -23,8 +27,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro import core
-from repro.core import engine_prune
-from repro.core.planner import MEASURED_MERGE_COSTS
+from repro.core import engine_prune, unshard_mask
+from repro.core.planner import MEASURED_MERGE_COSTS, optimal_pass2
 
 requires_multidevice = pytest.mark.skipif(
     len(jax.devices()) < 4,
@@ -154,6 +158,136 @@ def test_chunked_apply_equals_unchunked(algo, mk, params, block):
     b = engine_prune(algo, x, mode="two_pass", shards=5,
                      apply_block=block, **params).keep
     assert bool(jnp.all(a == b))
+
+
+# ------------------------------------------------- mesh-resident pass 2
+# One maker per algorithm; m is overridden to hit divisible vs padded
+# per-device lane lengths (S·n/D). Streams are tuples: groupby/having
+# take (keys, values).
+_RESIDENT_CASES = [
+    ("topn_det", lambda rs, m: (jnp.asarray(
+        (rs.random(m) * 1e4 + 1).astype(np.float32)),),
+     dict(N=12, w=5)),
+    ("topn_rand", lambda rs, m: (jnp.asarray(
+        rs.permutation(m).astype(np.float32) + 1),),
+     dict(d=64, w=8)),
+    ("distinct", lambda rs, m: (jnp.asarray(
+        rs.integers(1, 200, m).astype(np.uint32)),),
+     dict(d=32, w=4)),
+    ("skyline", lambda rs, m: (jnp.asarray(
+        rs.integers(1, 300, (m, 3)).astype(np.float32)),),
+     dict(w=6)),
+    ("groupby", lambda rs, m: (
+        jnp.asarray(rs.integers(0, 40, m).astype(np.uint32)),
+        jnp.asarray(rs.integers(1, 50, m).astype(np.int32))),
+     dict(d=16, w=4, agg="count")),
+    ("having", lambda rs, m: (
+        jnp.asarray(rs.integers(0, 50, m).astype(np.uint32)),
+        jnp.asarray(rs.integers(1, 9, m).astype(np.int32))),
+     dict(threshold=120, rows=3, width=256)),
+]
+
+
+@requires_multidevice
+@pytest.mark.parametrize("algo,mk,params", _RESIDENT_CASES,
+                         ids=[c[0] for c in _RESIDENT_CASES])
+@pytest.mark.parametrize("m", [4096, 4001], ids=["divisible", "padded"])
+def test_resident_pass2_equals_master_apply(algo, mk, params, m):
+    """pass2 placement never changes a single mask bit — for every
+    algorithm, whether S·n/D divides evenly or the last lane is padded."""
+    rs = np.random.default_rng(21)
+    streams = mk(rs, m)
+    a = engine_prune(algo, *streams, mode="mesh", shards=8,
+                     pass2="master", **params)
+    b = engine_prune(algo, *streams, mode="mesh", shards=8,
+                     pass2="mesh", **params)
+    assert bool(jnp.all(a.keep == unshard_mask(b.keep, m)))
+    # merged state and emissions are placement-invariant too
+    for x, y in zip(jax.tree_util.tree_leaves(a.state),
+                    jax.tree_util.tree_leaves(b.state)):
+        assert bool(jnp.all(x == y))
+    assert (a.emitted is None) == (b.emitted is None)
+    if a.emitted is not None:
+        for x, y in zip(jax.tree_util.tree_leaves(a.emitted),
+                        jax.tree_util.tree_leaves(b.emitted)):
+            assert bool(jnp.all(x == y))
+
+
+@requires_multidevice
+@pytest.mark.parametrize("block", [64, 100])
+def test_resident_chunked_apply_equals_unchunked(block):
+    """apply_block chunking composes with the resident per-device apply
+    (the lax.map walks each device's resident entry blocks)."""
+    rs = np.random.default_rng(22)
+    vals = jnp.asarray(rs.integers(1, 300, 4001).astype(np.uint32))
+    a = engine_prune("distinct", vals, mode="mesh", shards=8,
+                     pass2="mesh", apply_block=None, d=32, w=4)
+    b = engine_prune("distinct", vals, mode="mesh", shards=8,
+                     pass2="mesh", apply_block=block, d=32, w=4)
+    assert bool(jnp.all(unshard_mask(a.keep, 4001)
+                        == unshard_mask(b.keep, 4001)))
+
+
+@requires_multidevice
+def test_resident_mask_stays_sharded_master_holds_no_stream():
+    """O(m/D + S·state) at the master: the keep mask comes back
+    device-sharded ([S, n] stacked, one S/D-lane slice per device) and
+    the only replicated output is the merged state (O(S·state))."""
+    rs = np.random.default_rng(23)
+    m, S = 1 << 16, 8
+    vals = jnp.asarray(rs.integers(1, 5000, m).astype(np.uint32))
+    r = engine_prune("distinct", vals, mode="mesh", shards=S,
+                     pass2="mesh", d=64, w=4)
+    ndev = len(jax.devices())
+    assert r.keep.shape == (S, m // S)
+    assert not r.keep.sharding.is_fully_replicated
+    # each device materializes exactly its resident lanes: m/D entries
+    assert r.keep.sharding.shard_shape(r.keep.shape) == (S // ndev, m // S)
+    per_dev = max(s.data.size for s in r.keep.addressable_shards)
+    assert per_dev == m // ndev
+    # the master-side replicated payload is the merged state: O(S·state),
+    # orders of magnitude under the m-entry stream
+    state_bytes = sum(l.nbytes
+                     for l in jax.tree_util.tree_leaves(r.state))
+    assert state_bytes < m * vals.dtype.itemsize // 8
+
+
+@requires_multidevice
+def test_resident_pass2_auto_uses_planner_rule():
+    """pass2="auto" routes through planner.optimal_pass2: resident for
+    a long stream on a multi-device mesh, master on one device."""
+    rs = np.random.default_rng(24)
+    v = jnp.asarray((rs.random(1 << 14) * 1e4 + 1).astype(np.float32))
+    r = engine_prune("topn_det", v, mode="mesh", shards=8, pass2="auto",
+                     N=10, w=5)
+    # resident masks keep the stacked [S, n] layout
+    assert r.keep.ndim == 2
+    assert optimal_pass2(1 << 20, 8, 1 << 10) == "mesh"
+    assert optimal_pass2(1 << 20, 1, 1 << 10) == "master"
+    # a pathologically huge merged state pushes the rule back to master
+    assert optimal_pass2(1 << 10, 8, 1 << 30) == "master"
+
+
+def test_resident_pass2_requires_mesh_mode():
+    v = jnp.ones(64, jnp.float32)
+    with pytest.raises(ValueError, match="mesh"):
+        engine_prune("topn_det", v, mode="two_pass", shards=4,
+                     pass2="mesh", N=2, w=4)
+    with pytest.raises(ValueError, match="pass2"):
+        engine_prune("topn_det", v, mode="mesh", shards=4,
+                     pass2="nope", N=2, w=4)
+
+
+@requires_multidevice
+def test_resident_jittable():
+    rs = np.random.default_rng(25)
+    v = jnp.asarray((rs.random(1024) * 100 + 1).astype(np.float32))
+    fn = jax.jit(lambda x: engine_prune(
+        "topn_det", x, mode="mesh", shards=8, pass2="mesh",
+        N=8, w=5).keep)
+    want = engine_prune("topn_det", v, mode="mesh", shards=8,
+                        N=8, w=5).keep
+    assert bool(jnp.all(unshard_mask(fn(v), 1024) == want))
 
 
 @requires_multidevice
