@@ -8,12 +8,15 @@ multi-host mesh run": two OS processes (4 forced CPU devices each, 8
 global) joined via ``jax.distributed`` + gloo CPU collectives, running
 a minimal ``mode="mesh"`` TOP-N query both with the master-side apply
 and with the mesh-resident pass 2 — so the pass-1 state all-gather and
-the resident broadcast genuinely cross process boundaries.
+the resident broadcast genuinely cross process boundaries — plus one
+*batched* multi-query TOP-N run (mixed per-query N/w in a single
+program) whose fused Q-state collective crosses the same boundary.
 
 Checks: both placements produce the same mask, the mask is a superset
-of the true top-N (completion recovers the exact answer), and the
+of the true top-N (completion recovers the exact answer), the
 resident mask's addressable shards per process cover only that
-process's devices.
+process's devices, and the batched masks are bit-identical to a
+serial per-query loop.
 
 Usage:
   python scripts/ci_distributed_smoke.py            # parent: spawns 2 workers
@@ -87,6 +90,35 @@ def worker(process_id: int, port: int) -> None:
     assert np.isin(want, survivors).all(), "pruned a true top-N entry"
     print(f"worker {process_id}: OK (mask equal across placements, "
           f"top-{N} superset holds, kept {int(masks['mesh'].sum())}/{M})")
+
+    # batched multi-query: Q mixed-param TOP-N queries in ONE program —
+    # a single shard_map dispatch whose fused [Q, lanes, ...] state
+    # all-gather crosses the 2-process boundary — must reproduce the
+    # serial per-query loop bit-for-bit
+    from repro.core import engine_prune_batch, unshard_mask_batch
+
+    queries = [dict(N=8, w=4), dict(N=N, w=8), dict(N=16, w=6),
+               dict(N=4, w=5)]
+    replicate = jax.jit(jnp.asarray,
+                        out_shardings=NamedSharding(mesh, P()))
+    bfn = jax.jit(lambda x: engine_prune_batch(
+        "topn_det", queries, x, mode="mesh", shards=SHARDS, mesh=mesh,
+        pass2="mesh").keep)
+    kb = bfn(v)
+    # resident layout: each process materializes only its own lanes,
+    # Q times over
+    local = sum(s.data.size for s in kb.addressable_shards)
+    assert local == len(queries) * M // NUM_PROCESSES, local
+    kb = np.asarray(replicate(unshard_mask_batch(kb, M)))
+    for i, q in enumerate(queries):
+        sfn = jax.jit(lambda x, q=q: engine_prune(
+            "topn_det", x, mode="mesh", shards=SHARDS, mesh=mesh,
+            pass2="mesh", **q).keep)
+        ks = np.asarray(replicate(unshard_mask(sfn(v), M)))
+        assert (kb[i] == ks).all(), \
+            f"batched mask != serial loop for query {i}: {q}"
+    print(f"worker {process_id}: multiq OK (Q={len(queries)} batched "
+          f"masks == serial loop across {NUM_PROCESSES} processes)")
 
 
 def main() -> int:

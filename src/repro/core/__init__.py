@@ -6,7 +6,8 @@ keep-mask selecting A_Q(D) ⊆ D with Q(A_Q(D)) = Q(D); the master completes
 the query on the survivors.
 """
 from .pruning import PruneResult, compact, compact_argsort, prune_rate_vs_opt
-from .hashing import mix32, hash_mod, multi_hash, fingerprint, fingerprint_bits_thm4
+from .hashing import (mix32, hash_mod, hash_mod_dyn, multi_hash,
+                      fingerprint, fingerprint_bits_thm4)
 from .distinct import (distinct_prune, master_complete_distinct,
                        opt_keep_distinct, thm1_bound)
 from .topn import (topn_rand_prune, topn_det_prune, thm2_w, thm2_opt_d,
@@ -19,14 +20,18 @@ from .skyline import (skyline_prune, skyline_oracle, opt_keep_skyline,
 from .groupby import groupby_prune, master_complete_groupby, groupby_oracle
 from .filter import (Pred, And, Or, TRUE, relax, filter_prune, evaluate,
                      evaluate_truthtable, master_complete_filter)
-from .engine import (ALGORITHMS, MODES, PASS2, DistinctMerged,
+from .engine import (ALGORITHMS, MODES, MODES_BATCH, PASS2,
+                     BatchPruneResult, DistinctMerged,
                      TopNDetMerged, apply_merged, calibrate_merge_cost,
-                     default_mesh, engine_prune, merge_states,
-                     shard_stack, unshard_mask)
+                     default_mesh, engine_prune, engine_prune_batch,
+                     merge_states, shard_stack, unshard_mask,
+                     unshard_mask_batch)
 from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       pack_queries, rule_count, PackingPlan,
                       MultiSwitchPlan, plan_multi_switch, optimal_shards,
-                      optimal_pass2, pass2_time, MEASURED_MERGE_COSTS)
+                      optimal_pass2, pass2_time, MEASURED_MERGE_COSTS,
+                      QueryBatchPlan, plan_query_batch,
+                      RESIDENT_OVERHEAD_ENTRIES)
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

@@ -115,7 +115,7 @@ from .pruning import PruneResult
 from .sketches import CountMin
 from .skyline import SkylineState, skyline_prune
 from .topn import TopNRandState, topn_det_prune, topn_rand_prune
-from . import planner
+from . import batched, planner
 
 MODES = ("scan", "sharded", "two_pass", "mesh")
 ALGORITHMS = ("topn_det", "topn_rand", "distinct", "skyline", "groupby",
@@ -420,21 +420,24 @@ def _pad_axis1(a: jnp.ndarray, pad: int, fill) -> jnp.ndarray:
     return jnp.concatenate([a, block], axis=1)
 
 
-def _apply_chunked(spec: _AlgoSpec, merged, shard_streams, keep1, params,
+def _apply_chunked(apply_fn, pads_fn, merged, shard_streams, keep1, params,
                    block: int) -> jnp.ndarray:
-    """Run spec.apply over blocks of entries with ``lax.map``.
+    """Run an apply body over blocks of entries with ``lax.map``.
 
     Bounds the [S, n, S*w] pass-2 intermediate at [S, block, S*w]: the
     per-entry compare against the merged state is elementwise over
     entries, so filtering nb blocks sequentially is exact (tested:
-    chunked == unchunked in tests/test_mesh_engine.py).
+    chunked == unchunked in tests/test_mesh_engine.py). Shared between
+    the serial specs (``apply_fn=spec.apply``) and the batched engine
+    (which closes the batch caps over ``batched.BatchSpec.apply``); the
+    pad fills always come from the serial ``spec.pads``.
     """
     S, n = keep1.shape
     nb = -(-n // block)
     pad = nb * block - n
     if pad:
         flat = tuple(s.reshape((-1,) + s.shape[2:]) for s in shard_streams)
-        fills = spec.pads(flat, params)
+        fills = pads_fn(flat, params)
         shard_streams = tuple(_pad_axis1(s, pad, f)
                               for s, f in zip(shard_streams, fills))
         keep1 = _pad_axis1(keep1, pad, False)
@@ -444,7 +447,7 @@ def _apply_chunked(spec: _AlgoSpec, merged, shard_streams, keep1, params,
         for s in shard_streams)
     keep_b = jnp.moveaxis(keep1.reshape(S, nb, block), 1, 0)
     out = jax.lax.map(
-        lambda xs: spec.apply(merged, xs[0], xs[1], params),
+        lambda xs: apply_fn(merged, xs[0], xs[1], params),
         (streams_b, keep_b))
     return jnp.moveaxis(out, 0, 1).reshape(S, nb * block)[:, :n]
 
@@ -533,8 +536,8 @@ def _mesh_two_pass_resident(spec: _AlgoSpec, shard_streams, params, mesh,
                   _lane_ids=lane0 + jnp.arange(lanes, dtype=jnp.int32))
         if apply_block and spec.chunkable \
                 and apply_block < local[0].shape[1]:
-            keep2 = _apply_chunked(spec, merged, local, r1.keep, p2,
-                                   apply_block)
+            keep2 = _apply_chunked(spec.apply, spec.pads, merged, local,
+                                   r1.keep, p2, apply_block)
         else:
             keep2 = spec.apply(merged, local, r1.keep, p2)
         return ((keep2, merged, r1.emitted) if has_emitted
@@ -820,9 +823,309 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     merged = spec.merge(r1.state, params)
     if apply_block and spec.chunkable \
             and apply_block < shard_streams[0].shape[1]:
-        keep2 = _apply_chunked(spec, merged, shard_streams, r1.keep,
-                               params, apply_block)
+        keep2 = _apply_chunked(spec.apply, spec.pads, merged,
+                               shard_streams, r1.keep, params, apply_block)
     else:
         keep2 = spec.apply(merged, shard_streams, r1.keep, params)
     return PruneResult(keep=_unshard(keep2, m), state=merged,
                        emitted=emitted)
+
+
+# ------------------------------------------------- multi-query batching
+MODES_BATCH = ("scan", "two_pass", "mesh")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BatchPruneResult:
+    """Q queries' worth of ``PruneResult``: leading axis Q on every leaf.
+
+    keep: bool[Q, m] (stacked bool[Q, S, n] when pass 2 ran resident —
+    flatten with ``unshard_mask_batch``). state/emitted follow the same
+    per-mode contract as ``engine_prune`` with a leading Q axis; shape
+    params are padded to the batch max, so e.g. a query with w=3 in a
+    w_max=8 batch reports an 8-wide state whose slots past 3 are inert
+    pads. ``plan`` is the admission plan the batch ran under (static
+    metadata — waves, per-query byte charges, budget).
+    """
+
+    keep: jnp.ndarray
+    state: Any = None
+    emitted: Any = None
+    plan: Any = dataclasses.field(default=None,
+                                  metadata=dict(static=True))
+
+
+def unshard_mask_batch(keep: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Stacked [Q, S, n] batch keep masks -> flat bool[Q, m].
+
+    The batch analogue of ``unshard_mask``: per query, concatenate the
+    lanes in stream order and drop the tail pads.
+    """
+    return keep.reshape(keep.shape[0], -1)[:, :m]
+
+
+def _batch_query_bytes(bspec, qp, caps, lane_shapes, lanes: int) -> int:
+    """One query's device-resident state charge: padded per-lane switch
+    state (shape-only probe of the *batched* scan, so batch-max caps are
+    what is charged) times the lane count the resident broadcast ships.
+    """
+    qp0 = jax.tree_util.tree_map(lambda a: a[0], qp)
+    shapes = jax.eval_shape(
+        lambda *sh: bspec.scan(sh, qp0, caps).state, *lane_shapes)
+    per_lane = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(shapes))
+    return per_lane * lanes
+
+
+def _batch_pass2_host(bspec, pads_fn, shard_streams, qp_w, caps, r1,
+                      apply_block):
+    """Host-side merge + scan-free filter, vmapped over the wave's
+    queries. Shared by mode="two_pass" and mesh pass2="master"."""
+    S = shard_streams[0].shape[0]
+    lane_ids = jnp.arange(S, dtype=jnp.int32)
+    apply_fn = lambda mg, xs, kp, p: bspec.apply(mg, xs, kp, p, caps)
+
+    def pass2(qp1, st1, keep1):
+        merged = bspec.merge(st1, qp1, caps)
+        qp2 = dict(qp1, _lane_ids=lane_ids)
+        if apply_block and bspec.chunkable \
+                and apply_block < shard_streams[0].shape[1]:
+            keep2 = _apply_chunked(apply_fn, pads_fn, merged,
+                                   shard_streams, keep1, qp2, apply_block)
+        else:
+            keep2 = bspec.apply(merged, shard_streams, keep1, qp2, caps)
+        return keep2, merged
+
+    keep2, merged = jax.vmap(pass2)(qp_w, r1.state, r1.keep)
+    return keep2, merged, r1.emitted
+
+
+def _run_wave_two_pass(bspec, pads_fn, shard_streams, qp_w, caps,
+                       apply_block):
+    r1 = jax.vmap(lambda qp1: jax.vmap(
+        lambda *sh: bspec.scan(sh, qp1, caps))(*shard_streams))(qp_w)
+    return _batch_pass2_host(bspec, pads_fn, shard_streams, qp_w, caps,
+                             r1, apply_block)
+
+
+def _run_wave_mesh_master(bspec, pads_fn, shard_streams, qp_w, caps,
+                          mesh, axis, apply_block):
+    _mesh_lanes(shard_streams[0].shape[0], mesh.shape[axis])
+    worker = lambda qp, *local: jax.vmap(lambda qp1: jax.vmap(
+        lambda *sh: bspec.scan(sh, qp1, caps))(*local))(qp)
+    in_specs = (P(),) + (P(axis),) * len(shard_streams)
+    sm = compat.shard_map(worker, mesh, in_specs, P(None, axis))
+    r1 = sm(qp_w, *shard_streams)
+    return _batch_pass2_host(bspec, pads_fn, shard_streams, qp_w, caps,
+                             r1, apply_block)
+
+
+def _run_wave_mesh_resident(bspec, pads_fn, shard_streams, qp_w, caps,
+                            mesh, axis, apply_block):
+    """Both passes on the mesh for a whole admission wave.
+
+    The batch analogue of ``_mesh_two_pass_resident``, with the fused
+    collective the tentpole is about: pass 1 vmaps the per-query scan
+    over the wave *outside* the per-lane vmap, so every per-lane state
+    leaf carries a leading Q axis, and the single ``all_gather`` per
+    leaf ships all Q queries' states in one collective instead of Q
+    separate dispatches. Every device then folds + applies each query's
+    merged state against its resident entries once.
+    """
+    ndev = mesh.shape[axis]
+    lanes = _mesh_lanes(shard_streams[0].shape[0], ndev)
+    local_shapes = tuple(
+        jax.ShapeDtypeStruct((lanes,) + s.shape[1:], s.dtype)
+        for s in shard_streams)
+    qp_probe = jax.tree_util.tree_map(lambda a: a[:1], qp_w)
+    r1_shape = jax.eval_shape(
+        lambda *sh: jax.vmap(lambda qp1: jax.vmap(
+            lambda *x: bspec.scan(x, qp1, caps))(*sh))(qp_probe),
+        *local_shapes)
+    has_emitted = r1_shape.emitted is not None
+    apply_fn = lambda mg, xs, kp, p: bspec.apply(mg, xs, kp, p, caps)
+
+    def worker(qp, *local):
+        r1 = jax.vmap(lambda qp1: jax.vmap(
+            lambda *sh: bspec.scan(sh, qp1, caps))(*local))(qp)
+        # ONE fused collective: each state leaf is [Q, lanes, ...], so a
+        # single all_gather per leaf moves every query's states at once
+        gathered = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, axis, axis=1, tiled=True),
+            r1.state)
+        lane0 = jax.lax.axis_index(axis) * lanes
+        lane_ids = lane0 + jnp.arange(lanes, dtype=jnp.int32)
+
+        def pass2(qp1, st1, keep1):
+            merged = bspec.merge(st1, qp1, caps)
+            qp2 = dict(qp1, _lane_ids=lane_ids)
+            if apply_block and bspec.chunkable \
+                    and apply_block < local[0].shape[1]:
+                keep2 = _apply_chunked(apply_fn, pads_fn, merged, local,
+                                       keep1, qp2, apply_block)
+            else:
+                keep2 = bspec.apply(merged, local, keep1, qp2, caps)
+            return keep2, merged
+
+        keep2, merged = jax.vmap(pass2)(qp, gathered, r1.keep)
+        return ((keep2, merged, r1.emitted) if has_emitted
+                else (keep2, merged))
+
+    in_specs = (P(),) + (P(axis),) * len(shard_streams)
+    out_specs = ((P(None, axis), P())
+                 + ((P(None, axis),) if has_emitted else ()))
+    sm = compat.shard_map(worker, mesh, in_specs, out_specs)
+    out = sm(qp_w, *shard_streams)
+    return out[0], out[1], (out[2] if has_emitted else None)
+
+
+def _concat_waves(parts):
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def engine_prune_batch(algo: str, queries, *streams,
+                       mode: str = "two_pass",
+                       shards: int | None = None, mesh=None,
+                       mesh_axis: str = "shards",
+                       apply_block: int | None = None,
+                       pass2: str | None = None,
+                       device_budget_bytes: int | None = None
+                       ) -> BatchPruneResult:
+    """Run Q same-family queries over shared stream(s) as one program.
+
+    queries: list of per-query param dicts (the ``**params`` a serial
+    ``engine_prune`` call would take — mixed N/w/d/thresholds/seeds are
+    fine; shape params are padded to the batch max with validity masking
+    so every query's mask stays bit-identical to its serial run).
+    Family-static params (policy/score/agg, and which side of 2^16 the
+    hash modulus sits on) must agree across the batch —
+    ``query.run_queries`` groups specs so they do.
+
+    mode: "scan" (vmapped sequential scans), "two_pass" (host merge +
+    filter) or "mesh". ``pass2`` applies to mode="mesh" only and
+    defaults to "mesh" — the resident path is the point of batching:
+    one ``shard_map`` dispatch, one fused state collective, one
+    resident filter sweep per device for all Q queries. ``shards`` must
+    be a concrete lane count (``"auto"`` calibration is per-query).
+
+    device_budget_bytes: the §8 per-device memory budget. Every query
+    is charged its all-gathered padded state (S × per-lane bytes);
+    ``planner.plan_query_batch`` splits the batch into sequential
+    admission waves when the charges don't fit together. All waves run
+    with the *global* batch caps so their results concatenate along Q.
+
+    Returns ``BatchPruneResult`` — keep bool[Q, m], stacked
+    bool[Q, S, n] when pass 2 ran resident (``unshard_mask_batch``
+    flattens), with the admission plan attached.
+    """
+    if mode not in MODES_BATCH:
+        raise ValueError(
+            f"mode must be one of {MODES_BATCH}, got {mode!r} "
+            f"(mode='sharded' has no batched variant: use 'two_pass')")
+    if pass2 is not None:
+        if pass2 not in PASS2:
+            raise ValueError(
+                f"pass2 must be one of {PASS2}, got {pass2!r}")
+        if mode != "mesh":
+            raise ValueError(
+                f"pass2={pass2!r} only applies to mode='mesh' "
+                f"(got {mode!r})")
+    bspec = batched.BSPECS[algo]  # KeyError = unknown algorithm
+    spec = _SPECS[algo]
+    queries = list(queries)
+    if not queries:
+        raise ValueError("engine_prune_batch needs at least one query")
+    qp, caps = bspec.build(queries)
+    streams = tuple(s for s in streams if s is not None)
+    m = streams[0].shape[0]
+
+    ndev = ((mesh.shape[mesh_axis] if mesh is not None
+             else len(jax.devices())) if mode == "mesh" else 1)
+    if shards is None:
+        shards = ndev if mode == "mesh" else min(8, m)
+    if not isinstance(shards, int):
+        raise ValueError(
+            f"engine_prune_batch needs a concrete lane count, got "
+            f"shards={shards!r} ('auto' calibration is per-query)")
+    scan_only = mode == "scan" or (shards <= 1 and mode != "mesh")
+
+    if scan_only:
+        lane_shapes = tuple(jax.ShapeDtypeStruct(s.shape, s.dtype)
+                            for s in streams)
+        per_query = _batch_query_bytes(bspec, qp, caps, lane_shapes, 1)
+        shard_streams = None
+    else:
+        if shards > m:
+            raise ValueError(
+                f"shards={shards} exceeds stream length {m}")
+        if mode == "mesh" and mesh is None:
+            mesh = _mesh_for_shards(shards, mesh_axis)
+        if m % shards and spec.pad_validity and len(streams) < 3:
+            streams = streams + (jnp.ones(m, jnp.bool_),)
+        fills = (spec.pads(streams, {}) if m % shards
+                 else (0,) * len(streams))
+        shard_streams = tuple(shard_stack(s, shards, f)
+                              for s, f in zip(streams, fills))
+        if apply_block is None and mode == "mesh" and bspec.chunkable:
+            apply_block = DEFAULT_MESH_APPLY_BLOCK
+        lane_shapes = tuple(
+            jax.ShapeDtypeStruct(s.shape[1:], s.dtype)
+            for s in shard_streams)
+        per_query = _batch_query_bytes(bspec, qp, caps, lane_shapes,
+                                       shards)
+
+    plan = planner.plan_query_batch([per_query] * len(queries),
+                                    device_budget_bytes)
+
+    if mode == "mesh":
+        p2 = pass2 or "mesh"
+        if p2 == "auto":
+            # charge the largest wave's resident broadcast; one global
+            # placement keeps the keep-mask layout uniform across waves
+            wave_bytes = per_query * max(len(w) for w in plan.waves)
+            p2 = planner.optimal_pass2(m, mesh.shape[mesh_axis],
+                                       wave_bytes)
+    else:
+        p2 = None
+
+    parts = []
+    for wave in plan.waves:
+        idx = np.asarray(wave)
+        qp_w = jax.tree_util.tree_map(lambda a: a[idx], qp)
+        if scan_only:
+            r = jax.vmap(lambda qp1: bspec.scan(streams, qp1, caps))(qp_w)
+            parts.append((r.keep, r.state, r.emitted))
+        elif mode == "mesh" and p2 == "mesh":
+            parts.append(_run_wave_mesh_resident(
+                bspec, spec.pads, shard_streams, qp_w, caps, mesh,
+                mesh_axis, apply_block))
+        elif mode == "mesh":
+            parts.append(_run_wave_mesh_master(
+                bspec, spec.pads, shard_streams, qp_w, caps, mesh,
+                mesh_axis, apply_block))
+        else:
+            parts.append(_run_wave_two_pass(
+                bspec, spec.pads, shard_streams, qp_w, caps,
+                apply_block))
+    keep, state, emitted = _concat_waves(parts)
+
+    order = np.concatenate([np.asarray(w, np.int64) for w in plan.waves])
+    if not np.array_equal(order, np.arange(len(queries))):
+        inv = np.argsort(order)
+        keep = keep[inv]
+        state = jax.tree_util.tree_map(lambda a: a[inv], state)
+        emitted = jax.tree_util.tree_map(lambda a: a[inv], emitted)
+
+    if not scan_only:
+        # emissions keep the full padded length, flattened per query
+        emitted = (None if emitted is None else jax.tree_util.tree_map(
+            lambda e: e.reshape(e.shape[:1] + (-1,) + e.shape[3:]),
+            emitted))
+        if not (mode == "mesh" and p2 == "mesh"):
+            keep = unshard_mask_batch(keep, m)
+    return BatchPruneResult(keep=keep, state=state, emitted=emitted,
+                            plan=plan)

@@ -37,22 +37,38 @@ def mix32(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
     return h
 
 
-def hash_mod(x: jnp.ndarray, mod: int, seed: int = 0) -> jnp.ndarray:
-    """Hash entries into {0, ..., mod-1} (row selection on the switch)."""
-    # Multiply-shift range reduction avoids modulo bias for power-of-two and
-    # is cheap on hardware; for arbitrary mod use the high-word trick.
+def hash_mod_dyn(x: jnp.ndarray, mod, seed=0, *, small: bool = True) -> jnp.ndarray:
+    """`hash_mod` with traced `mod`/`seed`: the branch is the static `small` flag.
+
+    `hash_mod` picks multiply-shift vs modulo with a Python-level
+    ``mod < 2**16`` test, which fails when `mod` is a tracer (e.g. a
+    per-query parameter vmapped over a batch). Here the caller supplies
+    the branch statically; the two bodies are op-for-op identical to
+    `hash_mod`'s, so for a concrete `mod` with ``small == (mod < 2**16)``
+    the results are bit-identical.
+    """
     h = mix32(x, seed)
-    # (h * mod) >> 32 via uint64 is unavailable without x64; use float-free
-    # 16-bit split multiply to compute the high 32 bits of h * mod.
-    lo = h & jnp.uint32(0xFFFF)
-    hi = h >> 16
-    m = jnp.uint32(mod)
-    # h*m = hi*m*2^16 + lo*m ;  we need >> 32
-    t = (hi * m) + ((lo * m) >> 16)  # == (h*m) >> 16, modulo 2^32 (safe: mod < 2^16 OK)
-    if mod < (1 << 16):
+    if small:
+        # multiply-shift range reduction via 16-bit split (see hash_mod)
+        lo = h & jnp.uint32(0xFFFF)
+        hi = h >> 16
+        m = jnp.uint32(mod)
+        t = (hi * m) + ((lo * m) >> 16)
         return (t >> 16).astype(jnp.int32)
-    # fall back to modulo for large mod (fine in JAX; switch would use CRC pools)
-    return (mix32(x, seed) % jnp.uint32(mod)).astype(jnp.int32)
+    return (h % jnp.uint32(mod)).astype(jnp.int32)
+
+
+def hash_mod(x: jnp.ndarray, mod: int, seed: int = 0) -> jnp.ndarray:
+    """Hash entries into {0, ..., mod-1} (row selection on the switch).
+
+    Multiply-shift range reduction avoids modulo bias for power-of-two and
+    is cheap on hardware; ``(h * mod) >> 32`` via uint64 is unavailable
+    without x64, so a 16-bit split multiply computes the high word
+    (``t = hi*m + ((lo*m) >> 16) == (h*m) >> 16`` modulo 2^32, safe while
+    mod < 2^16). For larger mod we fall back to modulo (fine in JAX; the
+    switch would use CRC pools).
+    """
+    return hash_mod_dyn(x, mod, seed, small=mod < (1 << 16))
 
 
 def multi_hash(x: jnp.ndarray, mod: int, num: int, seed: int = 0) -> jnp.ndarray:

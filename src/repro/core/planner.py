@@ -199,9 +199,21 @@ def plan_multi_switch(queries: dict[str, ResourceFootprint], m: int,
         est_speedup=m / t_parallel, feasible=True)
 
 
+# fixed cost of the resident pass-2 path, in per-entry stream-work
+# units: the in-shard_map all-gather + every device folding the merged
+# state is a constant dispatch/collective overhead that the per-entry
+# terms don't capture. Calibrated against BENCH_results.json: at
+# m=2^17 (skyline bench shape) the resident apply measured 0.8x master
+# — the (D-1)/D ≈ 115k entries it saves are smaller than the fixed
+# cost — while at m=2^20 (topn/distinct shapes) resident measured
+# 1.1-2.3x faster, so the break-even sits between: m·(D-1)/D ≈ 2^18.
+RESIDENT_OVERHEAD_ENTRIES = float(1 << 18)
+
+
 def pass2_time(m: int, ndev: int, state_bytes: int, placement: str,
                apply_entry_cost: float = 1.0,
-               broadcast_byte_cost: float | None = None) -> float:
+               broadcast_byte_cost: float | None = None,
+               resident_overhead: float | None = None) -> float:
     """Pass-2 term of T(S), in per-entry stream-work units.
 
     ``"master"``: the merged-state filter runs where the states were
@@ -209,8 +221,10 @@ def pass2_time(m: int, ndev: int, state_bytes: int, placement: str,
 
     ``"mesh"``: the merged state (state_bytes ≈ S·per-lane bytes) is
     broadcast to all D devices — state_bytes·D wire work at the same
-    per-byte cost c as the pass-1 state shipping — and each device
-    filters only its resident m/D entries: state_bytes·D·c + (m/D)·f.
+    per-byte cost c as the pass-1 state shipping — each device filters
+    only its resident m/D entries, and the fused collective + replicated
+    fold cost a fixed ``resident_overhead``:
+    state_bytes·D·c + (m/D)·f + overhead.
 
     f (``apply_entry_cost``) is the per-entry filter cost relative to
     one entry of pass-1 streaming; the scan-free applies are cheaper
@@ -218,32 +232,103 @@ def pass2_time(m: int, ndev: int, state_bytes: int, placement: str,
     """
     if broadcast_byte_cost is None:
         broadcast_byte_cost = _MERGE_BYTE_COST
+    if resident_overhead is None:
+        resident_overhead = RESIDENT_OVERHEAD_ENTRIES
     if placement == "master":
         return m * apply_entry_cost
     if placement == "mesh":
         return (state_bytes * ndev * broadcast_byte_cost
-                + (m / ndev) * apply_entry_cost)
+                + (m / ndev) * apply_entry_cost
+                + resident_overhead)
     raise ValueError(f"placement must be 'master' or 'mesh', "
                      f"got {placement!r}")
 
 
 def optimal_pass2(m: int, ndev: int, state_bytes: int,
                   apply_entry_cost: float = 1.0,
-                  broadcast_byte_cost: float | None = None) -> str:
+                  broadcast_byte_cost: float | None = None,
+                  resident_overhead: float | None = None) -> str:
     """Pick the pass-2 placement: master-apply m·f vs broadcast
-    state_bytes·D + (m/D)·f.
+    state_bytes·D + (m/D)·f + fixed resident overhead.
 
     With one device there is nothing to spread — master. Otherwise the
-    resident apply wins unless the merged state is so large that
-    re-broadcasting it to D devices outweighs filtering (D-1)/D of the
-    stream off the master. Used by ``engine_prune(pass2="auto")``.
+    resident apply wins when the (D-1)/D of the stream it keeps off the
+    master outweighs both the merged-state re-broadcast and the fixed
+    collective overhead — which flips the choice back to master for
+    short streams (e.g. the m=2^17 skyline bench shape, where resident
+    measured 0.8x master). Used by ``engine_prune(pass2="auto")``.
     """
     if ndev <= 1:
         return "master"
-    args = (apply_entry_cost, broadcast_byte_cost)
+    args = (apply_entry_cost, broadcast_byte_cost, resident_overhead)
     return ("mesh" if pass2_time(m, ndev, state_bytes, "mesh", *args)
             < pass2_time(m, ndev, state_bytes, "master", *args)
             else "master")
+
+
+# ------------------------------------------------- multi-query admission
+@dataclasses.dataclass(frozen=True)
+class QueryBatchPlan:
+    """Admission plan for Q concurrent queries against one device budget.
+
+    The §8 resource constraint as an *enforcer*: every query in a wave
+    keeps its (padded) switch state resident on every device while the
+    batched engine runs, so a wave's total per-device bytes must fit
+    ``device_budget_bytes``. Queries that don't fit together are split
+    into sequential admission waves; a single query larger than the
+    budget is admitted alone (and listed in ``oversized``) — serializing
+    it further cannot shrink its state.
+
+    Frozen with tuple fields so the plan is hashable (it rides along as
+    static metadata on the batched engine's result pytree).
+    """
+
+    waves: tuple            # tuple[tuple[int, ...], ...] — query indices
+    per_query_bytes: tuple  # int per query — resident state charge
+    device_budget_bytes: int | None
+    oversized: tuple = ()   # indices admitted alone despite exceeding it
+
+    @property
+    def num_waves(self) -> int:
+        return len(self.waves)
+
+
+def plan_query_batch(per_query_bytes, device_budget_bytes=None
+                     ) -> QueryBatchPlan:
+    """Pack Q query-state charges into admission waves under the budget.
+
+    Order-preserving next-fit: queries are admitted in arrival order and
+    a wave closes when the next query would overflow the budget, so each
+    wave is a contiguous index run and concatenating wave results along
+    Q preserves the caller's query order. ``device_budget_bytes=None``
+    means no enforcement — one wave with every query.
+    """
+    per_query_bytes = tuple(int(b) for b in per_query_bytes)
+    n = len(per_query_bytes)
+    if device_budget_bytes is None:
+        waves = (tuple(range(n)),) if n else ()
+        return QueryBatchPlan(waves=waves, per_query_bytes=per_query_bytes,
+                              device_budget_bytes=None)
+    if device_budget_bytes <= 0:
+        raise ValueError("device_budget_bytes must be positive or None")
+    waves: list[tuple[int, ...]] = []
+    cur: list[int] = []
+    used = 0
+    oversized: list[int] = []
+    for i, b in enumerate(per_query_bytes):
+        if b > device_budget_bytes:
+            oversized.append(i)
+        if cur and used + b > device_budget_bytes:
+            waves.append(tuple(cur))
+            cur, used = [], 0
+        cur.append(i)
+        used += b
+    if cur:
+        waves.append(tuple(cur))
+    return QueryBatchPlan(waves=tuple(waves),
+                          per_query_bytes=per_query_bytes,
+                          device_budget_bytes=int(device_budget_bytes),
+                          oversized=tuple(oversized))
 
 
 def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096,

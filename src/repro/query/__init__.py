@@ -7,5 +7,7 @@ completes the query on survivors. `protocol` models the §7.2 reliability
 protocol and its superset-safety property.
 """
 from .tables import Table, make_products_ratings, make_uservisits, make_rankings
-from .engine import run_query, QuerySpec
-from .protocol import SwitchReliability, simulate_lossy_stream
+from .engine import run_query, run_queries, QuerySpec
+from .protocol import (SwitchReliability, MultiQuerySwitchReliability,
+                       combined_forward_mask, simulate_lossy_stream,
+                       simulate_lossy_stream_multi)

@@ -72,69 +72,199 @@ def _engine_call(algo: str, streams: tuple, mesh, axis: str,
                             state=r.state, emitted=r.emitted)
 
 
+def _prepare(spec: QuerySpec, table: Table):
+    """Per-kind stream building / engine params / master completion.
+
+    Shared by `run_query` (one engine call) and `run_queries` (one
+    batched call per compatible group): returns ``(algo, streams,
+    engine_params, complete)`` where ``complete`` maps a flat-mask
+    ``PruneResult`` to the user-facing result dict. join/filter have
+    bespoke bodies and are not prepared here.
+    """
+    k = spec.kind
+    p = dict(spec.params)
+    if k == "distinct":
+        (cname,) = spec.columns
+        vals = table.cols[cname]
+        params = dict(d=p["d"], w=p["w"], policy=p.get("policy", "lru"))
+        if "seed" in p:
+            params["seed"] = p["seed"]
+
+        def complete(r):
+            out_mask = core.master_complete_distinct(vals, r.keep)
+            uniq = np.unique(np.asarray(vals)[np.asarray(out_mask)])
+            return _result(uniq, r.keep)
+
+        return "distinct", (vals,), params, complete
+    if k == "topn":
+        (cname,) = spec.columns
+        vals = table.cols[cname]
+        if p.get("mode", "rand") == "rand":
+            algo, params = "topn_rand", dict(d=p["d"], w=p["w"])
+            if "seed" in p:
+                params["seed"] = p["seed"]
+        else:
+            algo, params = "topn_det", dict(N=p["N"], w=p.get("w", 4))
+
+        def complete(r):
+            topv, topi = core.master_complete_topn(vals, r.keep, p["N"])
+            return _result((np.asarray(topv), np.asarray(topi)), r.keep)
+
+        return algo, (vals,), params, complete
+    if k == "having":
+        kname, vname = spec.columns
+        keys, vals = table.cols[kname], table.cols[vname]
+        params = dict(threshold=p["threshold"], rows=p.get("rows", 3),
+                      width=p.get("width", 1024), agg=p.get("agg", "sum"))
+        if "seed" in p:
+            params["seed"] = p["seed"]
+
+        def complete(r):
+            out = core.master_complete_having(keys, vals, r.keep,
+                                              p["threshold"],
+                                              p.get("agg", "sum"))
+            return _result(out, r.keep)
+
+        return "having", (keys, vals), params, complete
+    if k == "skyline":
+        pts = jnp.stack([table.cols[c] for c in spec.columns], axis=-1)
+        params = dict(w=p["w"], score=p.get("score", "aph"))
+
+        def complete(r):
+            out = core.master_complete_skyline(pts, r.keep)
+            return _result(np.asarray(out), r.keep)
+
+        return "skyline", (pts,), params, complete
+    if k == "groupby":
+        kname, vname = spec.columns
+        keys, vals = table.cols[kname], table.cols[vname]
+        agg = p.get("agg", "sum")
+        params = dict(d=p["d"], w=p["w"], agg=agg)
+        if "seed" in p:
+            params["seed"] = p["seed"]
+
+        def complete(r):
+            out = core.master_complete_groupby(r, agg)
+            # switch→master traffic = valid evictions + state entries
+            ev_ok = np.asarray(r.emitted[2]).ravel()
+            st_ok = np.asarray(r.state.valid).ravel()
+            traffic = jnp.asarray(np.concatenate([ev_ok, st_ok]))
+            return _result(out, ~traffic)  # emitted partials = traffic
+
+        return "groupby", (keys, vals), params, complete
+    raise KeyError(k)
+
+
 def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
     """Execute a query with switch pruning; returns output + statistics."""
     k = spec.kind
     p = dict(spec.params)
     if k == "join":
         return _run_join(spec, tables, mesh, axis, p)
-    table: Table = tables
-    if k == "distinct":
-        (cname,) = spec.columns
-        vals = table.cols[cname]
-        r = _engine_call("distinct", (vals,), mesh, axis,
-                         dict(d=p["d"], w=p["w"],
-                              policy=p.get("policy", "lru")))
-        out_mask = core.master_complete_distinct(vals, r.keep)
-        uniq = np.unique(np.asarray(vals)[np.asarray(out_mask)])
-        return _result(uniq, r.keep)
-    if k == "topn":
-        (cname,) = spec.columns
-        vals = table.cols[cname]
-        if p.get("mode", "rand") == "rand":
-            algo, params = "topn_rand", dict(d=p["d"], w=p["w"])
-        else:
-            algo, params = "topn_det", dict(N=p["N"], w=p.get("w", 4))
-        r = _engine_call(algo, (vals,), mesh, axis, params)
-        topv, topi = core.master_complete_topn(vals, r.keep, p["N"])
-        return _result((np.asarray(topv), np.asarray(topi)), r.keep)
-    if k == "having":
-        kname, vname = spec.columns
-        keys, vals = table.cols[kname], table.cols[vname]
-        r = _engine_call("having", (keys, vals), mesh, axis,
-                         dict(threshold=p["threshold"],
-                              rows=p.get("rows", 3),
-                              width=p.get("width", 1024),
-                              agg=p.get("agg", "sum")))
-        out = core.master_complete_having(keys, vals, r.keep,
-                                          p["threshold"],
-                                          p.get("agg", "sum"))
-        return _result(out, r.keep)
-    if k == "skyline":
-        pts = jnp.stack([table.cols[c] for c in spec.columns], axis=-1)
-        r = _engine_call("skyline", (pts,), mesh, axis,
-                         dict(w=p["w"], score=p.get("score", "aph")))
-        out = core.master_complete_skyline(pts, r.keep)
-        return _result(np.asarray(out), r.keep)
-    if k == "groupby":
-        kname, vname = spec.columns
-        keys, vals = table.cols[kname], table.cols[vname]
-        agg = p.get("agg", "sum")
-        r = _engine_call("groupby", (keys, vals), mesh, axis,
-                         dict(d=p["d"], w=p["w"], agg=agg))
-        out = core.master_complete_groupby(r, agg)
-        # switch→master traffic = valid evictions + final state entries
-        ev_ok = np.asarray(r.emitted[2]).ravel()
-        st_ok = np.asarray(r.state.valid).ravel()
-        traffic = jnp.asarray(np.concatenate([ev_ok, st_ok]))
-        return _result(out, ~traffic)  # emitted partials are the traffic
     if k == "filter":
+        table: Table = tables
         formula = p["formula"]
         cols = {c: table.cols[c] for c in spec.columns}
         pr = core.filter_prune(formula, cols, p.get("truthtable", True))
         final = core.master_complete_filter(formula, cols, pr.keep)
         return _result(np.nonzero(np.asarray(final))[0], pr.keep)
-    raise KeyError(k)
+    algo, streams, params, complete = _prepare(spec, tables)
+    return complete(_engine_call(algo, streams, mesh, axis, params))
+
+
+def _group_key(spec: QuerySpec):
+    """Batching key: specs batch together only when their streams and
+    family statics agree — same columns, same policy/score/agg, and the
+    same side of `hash_mod`'s 2^16 multiply-shift/modulo branch (a
+    static in the traced program; see `core.batched`). Returns None for
+    kinds with bespoke execution paths (join, filter)."""
+    k, p = spec.kind, spec.params
+    if k == "distinct":
+        return (k, spec.columns, p.get("policy", "lru"),
+                int(p["d"]) < (1 << 16))
+    if k == "topn":
+        if p.get("mode", "rand") == "rand":
+            return (k, spec.columns, "rand", int(p["d"]) < (1 << 16))
+        return (k, spec.columns, "det")
+    if k == "skyline":
+        return (k, spec.columns, p.get("score", "aph"))
+    if k == "groupby":
+        return (k, spec.columns, p.get("agg", "sum"),
+                int(p["d"]) < (1 << 16))
+    if k == "having":
+        return (k, spec.columns, p.get("agg", "sum"))
+    return None
+
+
+def run_queries(specs, tables, mesh=None, axis: str = "data",
+                device_budget_bytes: int | None = None) -> list:
+    """Execute many queries, batching compatible ones into one program.
+
+    Specs are grouped by `_group_key` (same algorithm family, columns
+    and family statics); each multi-spec group runs through
+    ``core.engine_prune_batch`` — one scan of the shared stream, and on
+    a mesh one `shard_map` dispatch + one fused state collective for
+    the whole group, with pass 2 resident on the workers.  Singleton
+    groups and join/filter specs fall back to `run_query`.  Results
+    come back in input order, one `run_query`-shaped dict per spec,
+    bit-identical to a serial `run_query` loop.
+
+    device_budget_bytes caps each group's per-device resident state
+    (the paper's §8 switch-memory constraint); oversubscribed groups
+    are split into sequential admission waves by
+    ``planner.plan_query_batch``.
+    """
+    specs = list(specs)
+    results: list = [None] * len(specs)
+    groups: dict = {}
+    for i, spec in enumerate(specs):
+        key = _group_key(spec)
+        if key is None:
+            results[i] = run_query(spec, tables, mesh, axis)
+        else:
+            groups.setdefault(key, []).append(i)
+    for idxs in groups.values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            results[i] = run_query(specs[i], tables, mesh, axis)
+            continue
+        prepped = [_prepare(specs[i], tables) for i in idxs]
+        algo, streams = prepped[0][0], prepped[0][1]
+        queries = [pr[2] for pr in prepped]
+        m = streams[0].shape[0]
+        if mesh is None:
+            rb = core.engine_prune_batch(
+                algo, queries, *streams, mode="scan",
+                device_budget_bytes=device_budget_bytes)
+            keep = rb.keep
+        else:
+            rb = core.engine_prune_batch(
+                algo, queries, *streams, mode="mesh",
+                shards=mesh.shape[axis], mesh=mesh, mesh_axis=axis,
+                pass2="mesh", device_budget_bytes=device_budget_bytes)
+            keep = core.unshard_mask_batch(rb.keep, m)
+        w_cap = (max(int(q["w"]) for q in queries)
+                 if algo == "groupby" else None)
+        for j, i in enumerate(idxs):
+            state_j = jax.tree_util.tree_map(lambda a: a[j], rb.state)
+            if algo == "groupby":
+                # trim batch-cap pads (always-invalid slots) back to the
+                # query's own (d, w) so master completion and traffic
+                # stats see the serial state shape; columns come in
+                # per-shard blocks of the batch w-cap (one block in
+                # scan mode)
+                d, w = int(queries[j]["d"]), int(queries[j]["w"])
+                state_j = jax.tree_util.tree_map(
+                    lambda a: a.reshape(a.shape[0], -1, w_cap)
+                               [:d, :, :w].reshape(d, -1), state_j)
+            rj = core.PruneResult(
+                keep=keep[j],
+                state=state_j,
+                emitted=(None if rb.emitted is None else
+                         jax.tree_util.tree_map(lambda a: a[j],
+                                                rb.emitted)))
+            results[i] = prepped[j][3](rj)
+    return results
 
 
 def _run_join(spec, tables, mesh, axis, p):

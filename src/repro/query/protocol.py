@@ -35,6 +35,59 @@ class SwitchReliability:
         return "drop", False
 
 
+@dataclasses.dataclass
+class MultiQuerySwitchReliability:
+    """§7.2 state machine for a switch multiplexing Q concurrent queries.
+
+    One SEQ register per flow is shared by all Q queries (the deployed
+    switch processes each packet once through every query's pipeline
+    stage). A packet is ACK-pruned only when EVERY query prunes it; if
+    any query needs it, the packet is forwarded — so each query's
+    master receives a superset of that query's survivors, and superset
+    safety applies per query.
+    """
+    last_seq: int = -1
+
+    def on_packet(self, seq: int, prune_fns) -> tuple[str, bool]:
+        """Returns (action, processed). action ∈ ack_prune|forward|drop.
+
+        prune_fns: one decision callable per query. All are evaluated
+        on first processing (every query's switch state updates), not
+        short-circuited.
+        """
+        if seq == self.last_seq + 1:
+            self.last_seq = seq
+            pruned = [bool(fn(seq)) for fn in prune_fns]
+            return ("ack_prune" if all(pruned) else "forward"), True
+        if seq <= self.last_seq:
+            # already processed once: forward without touching state
+            return "forward", False
+        return "drop", False
+
+
+def combined_forward_mask(keep_batch):
+    """[Q, m] per-query keep masks -> the switch's single per-entry
+    forward decision: forward iff any of the Q queries keeps it."""
+    import numpy as np
+
+    return np.any(np.asarray(keep_batch), axis=0)
+
+
+def simulate_lossy_stream_multi(values, keep_batch, drop_prob: float,
+                                seed: int = 0,
+                                max_rounds: int = 64) -> dict:
+    """`simulate_lossy_stream` for Q multiplexed queries.
+
+    keep_batch: [Q, m] per-query keep masks (e.g.
+    ``engine_prune_batch(...).keep``). The switch forwards an entry iff
+    any query keeps it, so the master-received set is a superset of
+    every individual query's survivor set.
+    """
+    mask = combined_forward_mask(keep_batch)
+    return simulate_lossy_stream(values, mask, drop_prob, seed,
+                                 max_rounds)
+
+
 def simulate_lossy_stream(values, prune_keep_mask, drop_prob: float,
                           seed: int = 0, max_rounds: int = 64) -> dict:
     """Workers retransmit un-ACKed packets; switch runs the §7.2 protocol.

@@ -1,0 +1,251 @@
+"""Multi-query batched execution (`engine_prune_batch`).
+
+The contract under test is bit-identity: for every query q in a batch
+of Q same-family queries with *mixed* per-query params, the batched keep
+mask row equals the mask a serial ``engine_prune`` call with q's own
+params produces — across scan / two_pass / mesh (master and resident
+pass 2) execution, and across admission-wave splits when the batch
+exceeds the device memory budget. Runs on the 8-device forced-CPU
+platform from conftest.py so the mesh paths exercise the real fused
+collective.
+"""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from hypstub import given, settings, st, HAS_HYPOTHESIS  # noqa: F401
+from repro import core
+from repro.core import (engine_prune, engine_prune_batch, unshard_mask,
+                        unshard_mask_batch)
+from repro.core.hashing import hash_mod, hash_mod_dyn
+
+requires_multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >=4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+M = 2001  # not a multiple of 8: exercises stream-pad validity masking
+
+
+def _value_stream(rs, m=M):
+    return (jnp.asarray((rs.random(m) * 1e4 + 1).astype(np.float32)),)
+
+
+def _key_stream(rs, m=M):
+    return (jnp.asarray(rs.integers(1, 250, m).astype(np.uint32)),)
+
+
+def _point_stream(rs, m=M):
+    return (jnp.asarray(rs.integers(1, 500, (m, 3)).astype(np.float32)),)
+
+
+def _kv_streams(rs, m=M):
+    return (jnp.asarray(rs.integers(0, 60, m).astype(np.uint32)),
+            jnp.asarray(rs.integers(1, 40, m).astype(np.int32)))
+
+
+# Mixed per-query params per family: different shape params (w, d,
+# sketch rows/width) AND different value params (N, threshold, seed).
+_CASES = [
+    ("topn_det", _value_stream,
+     [dict(N=10, w=3), dict(N=50, w=6), dict(N=25, w=4), dict(N=5, w=8)]),
+    ("topn_rand", _value_stream,
+     [dict(d=64, w=3, seed=1), dict(d=128, w=6, seed=2),
+      dict(d=32, w=2), dict(d=64, w=4, seed=9)]),
+    ("distinct", _key_stream,
+     [dict(d=32, w=2), dict(d=64, w=4, seed=3), dict(d=16, w=3, seed=1)]),
+    ("skyline", _point_stream,
+     [dict(w=4), dict(w=8), dict(w=6)]),
+    ("groupby", _kv_streams,
+     [dict(d=16, w=2), dict(d=8, w=4, seed=5), dict(d=32, w=3, seed=2)]),
+    ("having", _kv_streams,
+     [dict(threshold=500, rows=2, width=128),
+      dict(threshold=900, rows=3, width=256, seed=7),
+      dict(threshold=50, rows=4, width=64, seed=1)]),
+]
+_IDS = [c[0] for c in _CASES]
+
+
+def _assert_batch_matches_serial(algo, streams, queries, batch_kw,
+                                 serial_kw):
+    m = streams[0].shape[0]
+    r = engine_prune_batch(algo, queries, *streams, **batch_kw)
+    keep = r.keep
+    if keep.ndim > 2:  # resident pass 2: stacked [Q, S, n]
+        keep = unshard_mask_batch(keep, m)
+    for i, q in enumerate(queries):
+        s = engine_prune(algo, *streams, **serial_kw, **q)
+        ks = s.keep
+        if ks.ndim > 1:
+            ks = unshard_mask(ks, m)
+        assert bool(jnp.all(keep[i] == ks)), f"{algo} query {i}: {q}"
+    return r
+
+
+@pytest.mark.parametrize("algo,mk,queries", _CASES, ids=_IDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batch_scan_bit_identical(algo, mk, queries, seed):
+    rs = np.random.default_rng(seed)
+    _assert_batch_matches_serial(algo, mk(rs), queries,
+                                 dict(mode="scan"), dict(mode="scan"))
+
+
+@pytest.mark.parametrize("algo,mk,queries", _CASES, ids=_IDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batch_two_pass_bit_identical(algo, mk, queries, seed):
+    rs = np.random.default_rng(seed)
+    _assert_batch_matches_serial(algo, mk(rs), queries,
+                                 dict(mode="two_pass", shards=8),
+                                 dict(mode="two_pass", shards=8))
+
+
+@requires_multidevice
+@pytest.mark.parametrize("algo,mk,queries", _CASES, ids=_IDS)
+@pytest.mark.parametrize("pass2", ["master", "mesh"])
+def test_batch_mesh_bit_identical(algo, mk, queries, pass2):
+    """One shard_map dispatch + one fused collective for the whole
+    batch, same masks as Q serial mesh runs — both pass-2 placements."""
+    rs = np.random.default_rng(3)
+    _assert_batch_matches_serial(
+        algo, mk(rs), queries,
+        dict(mode="mesh", shards=16, pass2=pass2),
+        dict(mode="mesh", shards=16, pass2=pass2))
+
+
+@requires_multidevice
+def test_batch_wave_split_bit_identical():
+    """A batch over the device budget splits into admission waves; the
+    masks (and their Q-order) are unchanged."""
+    rs = np.random.default_rng(4)
+    streams = _key_stream(rs)
+    queries = [dict(d=32, w=2), dict(d=64, w=4, seed=3),
+               dict(d=16, w=3, seed=1), dict(d=64, w=2, seed=5)]
+    free = engine_prune_batch("distinct", queries, *streams,
+                              mode="mesh", shards=16, pass2="mesh")
+    assert free.plan.num_waves == 1
+    per = free.plan.per_query_bytes[0]
+    tight = engine_prune_batch("distinct", queries, *streams,
+                               mode="mesh", shards=16, pass2="mesh",
+                               device_budget_bytes=2 * per)
+    assert tight.plan.num_waves == 2
+    assert tight.plan.waves == ((0, 1), (2, 3))
+    assert bool(jnp.all(free.keep == tight.keep))
+    # and each wave's masks still match the serial loop
+    _assert_batch_matches_serial(
+        "distinct", streams, queries,
+        dict(mode="mesh", shards=16, pass2="mesh",
+             device_budget_bytes=2 * per),
+        dict(mode="mesh", shards=16, pass2="mesh"))
+
+
+def test_batch_wave_split_two_pass_and_oversized():
+    rs = np.random.default_rng(5)
+    streams = _value_stream(rs)
+    queries = [dict(N=10, w=3), dict(N=40, w=5), dict(N=25, w=4)]
+    base = engine_prune_batch("topn_det", queries, *streams,
+                              mode="two_pass", shards=8)
+    per = base.plan.per_query_bytes[0]
+    # budget below one query: admitted alone, flagged oversized
+    r = engine_prune_batch("topn_det", queries, *streams,
+                           mode="two_pass", shards=8,
+                           device_budget_bytes=per - 1)
+    assert r.plan.num_waves == 3
+    assert r.plan.oversized == (0, 1, 2)
+    assert bool(jnp.all(base.keep == r.keep))
+
+
+def test_batch_state_and_emissions_match_serial():
+    """Beyond masks: the per-query state rows and groupby emissions are
+    the serial ones (pads excepted — checked via the valid flags)."""
+    rs = np.random.default_rng(6)
+    keys, vals = _kv_streams(rs)
+    queries = [dict(d=16, w=2), dict(d=8, w=4, seed=5)]
+    r = engine_prune_batch("groupby", queries, keys, vals, mode="scan")
+    for i, q in enumerate(queries):
+        s = engine_prune("groupby", keys, vals, mode="scan", **q)
+        for a, b in zip(r.emitted, s.emitted):
+            assert bool(jnp.all(a[i] == b))
+        d, w = q["d"], q["w"]
+        assert bool(jnp.all(r.state.valid[i][:d, :w] == s.state.valid))
+        assert bool(jnp.all(~r.state.valid[i][:, w:]))  # pads stay dead
+        sel = s.state.valid
+        assert bool(jnp.all(jnp.where(sel, r.state.keys[i][:d, :w], 0)
+                            == jnp.where(sel, s.state.keys, 0)))
+
+
+def test_batch_static_param_mismatch_raises():
+    v = jnp.ones(64, jnp.uint32)
+    with pytest.raises(ValueError, match="policy"):
+        engine_prune_batch("distinct", [dict(d=8, w=2, policy="lru"),
+                                        dict(d=8, w=2, policy="fifo")],
+                           v, mode="scan")
+    with pytest.raises(ValueError, match="2\\^16"):
+        engine_prune_batch("distinct", [dict(d=8, w=2),
+                                        dict(d=1 << 17, w=2)],
+                           v, mode="scan")
+    with pytest.raises(ValueError, match="agg"):
+        engine_prune_batch("groupby", [dict(d=8, w=2, agg="sum"),
+                                       dict(d=8, w=2, agg="max")],
+                           v, v, mode="scan")
+
+
+def test_batch_rejects_auto_shards_and_bad_modes():
+    v = jnp.ones(64, jnp.float32)
+    with pytest.raises(ValueError, match="concrete"):
+        engine_prune_batch("topn_det", [dict(N=2, w=4)], v,
+                           mode="two_pass", shards="auto")
+    with pytest.raises(ValueError, match="mode"):
+        engine_prune_batch("topn_det", [dict(N=2, w=4)], v,
+                           mode="sharded")
+    with pytest.raises(ValueError, match="mesh"):
+        engine_prune_batch("topn_det", [dict(N=2, w=4)], v,
+                           mode="two_pass", shards=4, pass2="mesh")
+    with pytest.raises(ValueError, match="at least one"):
+        engine_prune_batch("topn_det", [], v, mode="scan")
+
+
+@pytest.mark.parametrize("mod", [2, 1000, (1 << 16) - 1, 1 << 16,
+                                 1 << 20])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_hash_mod_dyn_matches_hash_mod(mod, seed):
+    """The traced-mod variant is op-for-op hash_mod when the static
+    `small` flag matches the concrete modulus."""
+    x = jnp.arange(4096, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    a = hash_mod(x, mod, seed)
+    b = hash_mod_dyn(x, jnp.int32(mod), jnp.uint32(seed),
+                     small=mod < (1 << 16))
+    assert bool(jnp.all(a == b))
+    assert bool(jnp.all((b >= 0) & (b < mod)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1),
+       st.integers(min_value=1, max_value=2**20),
+       st.integers(min_value=0, max_value=2**16))
+def test_hash_mod_dyn_property(x, mod, seed):
+    a = hash_mod(jnp.uint32(x), mod, seed)
+    b = hash_mod_dyn(jnp.uint32(x), mod, seed, small=mod < (1 << 16))
+    assert int(a) == int(b) and 0 <= int(a) < mod
+
+
+def test_batch_of_one_equals_serial():
+    rs = np.random.default_rng(8)
+    (v,) = _value_stream(rs)
+    r = engine_prune_batch("topn_det", [dict(N=20, w=5)], v,
+                           mode="two_pass", shards=8)
+    s = engine_prune("topn_det", v, mode="two_pass", shards=8, N=20, w=5)
+    assert r.keep.shape == (1, M)
+    assert bool(jnp.all(r.keep[0] == s.keep))
+
+
+@requires_multidevice
+def test_batch_mesh_jittable():
+    rs = np.random.default_rng(9)
+    (v,) = _value_stream(rs, 1024)
+    queries = [dict(N=8, w=5), dict(N=16, w=3)]
+    fn = jax.jit(lambda x: engine_prune_batch(
+        "topn_det", queries, x, mode="mesh", shards=8).keep)
+    want = engine_prune_batch("topn_det", queries, v, mode="mesh",
+                              shards=8).keep
+    assert bool(jnp.all(fn(v) == want))

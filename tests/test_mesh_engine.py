@@ -254,18 +254,38 @@ def test_resident_mask_stays_sharded_master_holds_no_stream():
 
 @requires_multidevice
 def test_resident_pass2_auto_uses_planner_rule():
-    """pass2="auto" routes through planner.optimal_pass2: resident for
-    a long stream on a multi-device mesh, master on one device."""
+    """pass2="auto" routes through planner.optimal_pass2: resident only
+    when the stream is long enough to amortize the resident dispatch
+    overhead, master for short streams and on one device."""
     rs = np.random.default_rng(24)
     v = jnp.asarray((rs.random(1 << 14) * 1e4 + 1).astype(np.float32))
     r = engine_prune("topn_det", v, mode="mesh", shards=8, pass2="auto",
                      N=10, w=5)
-    # resident masks keep the stacked [S, n] layout
-    assert r.keep.ndim == 2
+    # short stream: the fixed resident overhead dominates -> master
+    # apply -> flat bool[m] mask
+    assert r.keep.ndim == 1
     assert optimal_pass2(1 << 20, 8, 1 << 10) == "mesh"
     assert optimal_pass2(1 << 20, 1, 1 << 10) == "master"
     # a pathologically huge merged state pushes the rule back to master
     assert optimal_pass2(1 << 10, 8, 1 << 30) == "master"
+
+
+def test_pass2_auto_bench_shape_pins():
+    """Pin the placement decisions at the BENCH_results.json shapes so a
+    planner recalibration that regresses a bench row fails here first.
+
+    The skyline S=64 shape is the regression this calibration fixes:
+    resident apply measured 0.8x (slower than master) because its
+    merged state is w·S·(D+1) floats — the broadcast + fixed resident
+    overhead isn't paid back at m=2^17. TOP-N/DISTINCT at m=2^20 stay
+    resident."""
+    # skyline bench shape: m=2^17, D=8 devices, S=64 lanes of w=4
+    # (D+1=4)-wide f32 slots -> 64*4*4*8 = 8192 state bytes
+    assert optimal_pass2(1 << 17, 8, 8192) == "master"
+    # topn_det bench shape: m=2^20, S=64, (w+1)-slot ladder state
+    assert optimal_pass2(1 << 20, 8, 2816) == "mesh"
+    # distinct bench shape: m=2^20, S=64, d=2048·w=3 slot+valid state
+    assert optimal_pass2(1 << 20, 8, 1572864) == "mesh"
 
 
 def test_resident_pass2_requires_mesh_mode():

@@ -112,3 +112,55 @@ def test_optimal_shards_scaling():
     assert optimal_shards(1 << 24, 1 << 16) > optimal_shards(1 << 18, 1 << 16)
     assert optimal_shards(1 << 20, 1 << 10) > optimal_shards(1 << 20, 1 << 20)
     assert optimal_shards(1 << 20, 0) == 4096  # stateless: no merge cost
+
+
+# ------------------------------------------------- multi-query admission
+def test_plan_query_batch_no_budget_single_wave():
+    from repro.core import plan_query_batch
+
+    plan = plan_query_batch([100, 200, 300])
+    assert plan.waves == ((0, 1, 2),)
+    assert plan.num_waves == 1
+    assert plan.per_query_bytes == (100, 200, 300)
+    assert plan.device_budget_bytes is None and plan.oversized == ()
+    assert plan_query_batch([]).waves == ()
+
+
+def test_plan_query_batch_order_preserving_next_fit():
+    """Waves are contiguous index runs in arrival order, each within
+    the budget — concatenating wave results preserves query order."""
+    from repro.core import plan_query_batch
+
+    plan = plan_query_batch([40, 40, 40, 40, 40], device_budget_bytes=100)
+    assert plan.waves == ((0, 1), (2, 3), (4,))
+    for wave in plan.waves:
+        assert sum(plan.per_query_bytes[i] for i in wave) <= 100
+    flat = [i for w in plan.waves for i in w]
+    assert flat == sorted(flat) == list(range(5))
+
+
+def test_plan_query_batch_oversized_admitted_alone():
+    from repro.core import plan_query_batch
+
+    plan = plan_query_batch([50, 500, 50], device_budget_bytes=100)
+    assert plan.waves == ((0,), (1,), (2,))
+    assert plan.oversized == (1,)
+
+
+def test_plan_query_batch_bad_budget_raises():
+    from repro.core import plan_query_batch
+
+    with pytest.raises(ValueError, match="positive"):
+        plan_query_batch([10], device_budget_bytes=0)
+    with pytest.raises(ValueError, match="positive"):
+        plan_query_batch([10], device_budget_bytes=-5)
+
+
+def test_plan_query_batch_hashable_static_metadata():
+    """The plan rides on the batched result pytree as a static field,
+    so it must hash and compare by value."""
+    from repro.core import plan_query_batch
+
+    a = plan_query_batch([10, 20], device_budget_bytes=25)
+    b = plan_query_batch([10, 20], device_budget_bytes=25)
+    assert a == b and hash(a) == hash(b)

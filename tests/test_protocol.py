@@ -36,3 +36,63 @@ def test_lossy_delivery_completeness(drop, seed):
     mask[list(got)] = True
     out = core.master_complete_distinct(jnp.asarray(vals), jnp.asarray(mask))
     assert set(vals[np.asarray(out)].tolist()) == set(vals.tolist())
+
+
+# ---------------------------------------------- multi-query multiplexing
+def test_multi_query_switch_ack_requires_all_prune():
+    from repro.query import MultiQuerySwitchReliability
+
+    sw = MultiQuerySwitchReliability()
+    calls = []
+    act, proc = sw.on_packet(0, [lambda s: calls.append("a") or True,
+                                 lambda s: calls.append("b") or True])
+    assert (act, proc) == ("ack_prune", True)
+    # every query's pipeline stage processed the packet (no short-circuit)
+    assert calls == ["a", "b"]
+    # one dissenting query forces a forward
+    assert sw.on_packet(1, [lambda s: True, lambda s: False]) \
+        == ("forward", True)
+    # retransmission: forward without re-processing any query's state
+    assert sw.on_packet(0, [lambda s: True, lambda s: True]) \
+        == ("forward", False)
+    # gap: drop and wait
+    assert sw.on_packet(9, [lambda s: True, lambda s: True]) \
+        == ("drop", False)
+
+
+def test_combined_forward_mask_is_union_of_keeps():
+    from repro.query import combined_forward_mask
+
+    kb = np.array([[1, 0, 0, 1], [0, 0, 1, 1]], bool)
+    assert np.array_equal(combined_forward_mask(kb),
+                          np.array([1, 0, 1, 1], bool))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(0.0, 0.3), st.integers(0, 50))
+def test_multi_query_lossy_superset_safe_per_query(drop, seed):
+    """Q multiplexed queries over one lossy stream: each query's master
+    set is a superset of that query's survivors, so every query's
+    answer is unchanged (superset safety applies per query)."""
+    from repro.query import simulate_lossy_stream_multi
+
+    m = 50
+    rs = np.random.default_rng(seed)
+    vals = rs.integers(0, 12, m).astype(np.uint32)
+    keeps = np.stack([
+        np.asarray(core.distinct_prune(jnp.asarray(vals), d=4, w=2).keep),
+        np.asarray(core.topn_det_prune(
+            jnp.asarray(vals.astype(np.float32) + 1), N=5, w=4).keep),
+    ])
+    sim = simulate_lossy_stream_multi(vals.tolist(), keeps, drop_prob=drop,
+                                      seed=seed, max_rounds=5000)
+    assert sim["delivered_all"]
+    got = set(sim["master_indices"])
+    for q in range(keeps.shape[0]):
+        assert set(np.nonzero(keeps[q])[0].tolist()) <= got
+    # the union mask answers DISTINCT exactly
+    mask = np.zeros(m, bool)
+    mask[list(got)] = True
+    out = core.master_complete_distinct(jnp.asarray(vals),
+                                        jnp.asarray(mask))
+    assert set(vals[np.asarray(out)].tolist()) == set(vals.tolist())

@@ -108,3 +108,101 @@ def test_multiworker_8_devices():
         if k.endswith("_ok"):
             assert v, f"{k} failed: {out}"
     assert out["distinct_pruned"] > 0.5
+
+
+# --------------------------------------------------- multi-query batching
+def _results_equal(a, b):
+    if a["forwarded"] != b["forwarded"] or a["total"] != b["total"]:
+        return False
+    x, y = a["output"], b["output"]
+    if isinstance(x, tuple):
+        return all(np.array_equal(np.asarray(p), np.asarray(q))
+                   for p, q in zip(x, y))
+    if isinstance(x, dict):
+        return set(x) == set(y) and all(np.allclose(x[k], y[k]) for k in x)
+    return np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _multiq_specs():
+    return [
+        QuerySpec("topn", ("ad_revenue",), dict(mode="det", N=40, w=4)),
+        QuerySpec("distinct", ("source_ip",), dict(d=128, w=4)),
+        QuerySpec("topn", ("ad_revenue",), dict(mode="det", N=10, w=6)),
+        QuerySpec("distinct", ("source_ip",), dict(d=64, w=2)),
+        QuerySpec("topn", ("ad_revenue",), dict(mode="rand", d=256,
+                                                w=8, N=25)),
+        QuerySpec("groupby", ("lang", "ad_revenue"), dict(d=16, w=2)),
+        QuerySpec("groupby", ("lang", "ad_revenue"), dict(d=8, w=4)),
+        QuerySpec("having", ("lang", "ad_revenue"),
+                  dict(threshold=20000.0, rows=2, width=256)),
+        QuerySpec("having", ("lang", "ad_revenue"),
+                  dict(threshold=5000.0, rows=3, width=512)),
+    ]
+
+
+def test_run_queries_matches_serial_loop():
+    """Mixed specs grouped into batches come back in input order with
+    results identical to a per-spec run_query loop (scan path)."""
+    from repro.query import run_queries
+
+    uv = make_uservisits(8000, seed=11)
+    specs = _multiq_specs()
+    got = run_queries(specs, uv)
+    assert len(got) == len(specs)
+    for spec, g in zip(specs, got):
+        assert _results_equal(g, run_query(spec, uv)), spec
+
+
+def test_run_queries_budget_waves_match():
+    from repro.query import run_queries
+
+    uv = make_uservisits(4000, seed=12)
+    specs = _multiq_specs()
+    free = run_queries(specs, uv)
+    tight = run_queries(specs, uv, device_budget_bytes=1 << 14)
+    for spec, a, b in zip(specs, free, tight):
+        assert _results_equal(a, b), spec
+
+
+_MULTIQ_MESH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.query import QuerySpec, make_uservisits, run_query, run_queries
+
+mesh = jax.make_mesh((8,), ("data",))
+uv = make_uservisits(8000, seed=13)
+specs = [
+    QuerySpec("topn", ("ad_revenue",), dict(mode="det", N=40, w=4)),
+    QuerySpec("topn", ("ad_revenue",), dict(mode="det", N=10, w=6)),
+    QuerySpec("distinct", ("source_ip",), dict(d=128, w=4)),
+    QuerySpec("distinct", ("source_ip",), dict(d=64, w=2)),
+]
+got = run_queries(specs, uv, mesh=mesh)
+ok = True
+for spec, g in zip(specs, got):
+    r = run_query(spec, uv, mesh=mesh)
+    ok &= g["forwarded"] == r["forwarded"] and g["total"] == r["total"]
+    x, y = g["output"], r["output"]
+    if isinstance(x, tuple):
+        ok &= all(np.array_equal(np.asarray(p), np.asarray(q))
+                  for p, q in zip(x, y))
+    else:
+        ok &= np.array_equal(np.asarray(x), np.asarray(y))
+print("RESULT:" + json.dumps({"multiq_mesh_ok": bool(ok)}))
+"""
+
+
+def test_run_queries_mesh_8_devices():
+    """Batched groups cross the mesh path (one shard_map + one fused
+    collective per group) with results equal to the serial mesh loop."""
+    proc = subprocess.run([sys.executable, "-c", _MULTIQ_MESH],
+                          capture_output=True, text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    out = json.loads(line[0][len("RESULT:"):])
+    assert out["multiq_mesh_ok"]
