@@ -11,13 +11,14 @@ import traceback
 
 def main() -> None:
     from . import (bench_completion, bench_distinct, bench_engine,
-                   bench_resources, bench_scale, bench_skyline, bench_topn,
-                   roofline)
+                   bench_resources, bench_scale, bench_skyline,
+                   bench_stream, bench_topn, roofline)
     from .common import write_results
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_distinct, bench_topn, bench_skyline, bench_engine,
-                bench_scale, bench_completion, bench_resources, roofline):
+                bench_stream, bench_scale, bench_completion,
+                bench_resources, roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -1,16 +1,22 @@
 #!/usr/bin/env python
 """Bench regression gate: fresh --smoke numbers vs BENCH_results.json.
 
-Runs ``benchmarks.bench_engine`` in smoke mode (every stream shrunk to
-2^12 entries, seconds of wall time) and gates each ``engine_*`` row by
-its *name suffix* — the row name declares its unit, so new rows are
-gated without name-guessing special cases:
+Runs ``benchmarks.bench_engine`` and ``benchmarks.bench_stream`` in
+smoke mode (every stream shrunk, seconds of wall time) and gates each
+``engine_*`` / ``stream_*`` row by its *name suffix* — the row name
+declares its unit, so new rows are gated without name-guessing special
+cases:
 
   ``*_us``    wall-clock microseconds. A smoke run is strictly smaller
               work than the committed full-size run of the same row, so
               fresh > THRESHOLD x committed can only mean a real
               regression (recompile storm, accidental O(m^2), a
               collective gone sequential), never small-m noise.
+  ``*_p50_us`` / ``*_p99_us``  per-micro-batch latency percentiles,
+              gated exactly like ``_us``: smoke micro-batches are
+              strictly smaller, so smoke latency blowing past 3x the
+              committed full-size latency means a blocking call or a
+              recompile leaked onto the streaming hot path.
   ``*_x``     within-run speedup ratio, floored at FLOORS[name]
               (default 1.0): the batched/parallel path running slower
               than its baseline is breakage on any host at any m. Rows
@@ -20,11 +26,14 @@ gated without name-guessing special cases:
   ``*_qps``   throughput, higher is better. Smoke work is strictly
               smaller, so fresh qps below committed/THRESHOLD is a
               regression.
+  ``*_eps``   entries/sec (streaming sustained throughput) — gated
+              like ``_qps``.
   ``*_ratio`` informational ratio — reported, never gated.
   ``*_count`` resolved integer (lane counts etc.) — reported, never
               gated.
 
-Any ``engine_*`` row with none of these suffixes is an error: the
+Any ``engine_*``/``stream_*`` row with none of these suffixes is an
+error: the
 conventions only work if every row declares its unit. Rows with no
 committed baseline (newly added benches) are reported but never fail
 the ``_us``/``_qps`` comparisons; ``_x`` floors always apply (they are
@@ -49,9 +58,16 @@ THRESHOLD = 3.0
 # in the row's derived string).
 FLOORS = {
     "engine_topn_det_multiq_speedup_x": 5.0,
+    # the streaming tentpole mechanism: a donated fold that stops
+    # re-using its state buffers collapses to ~1x and must fail
+    "stream_fold_donation_x": 1.2,
 }
 
-SUFFIXES = ("_us", "_x", "_qps", "_ratio", "_count")
+# percentile-latency suffixes before the plain "_us" they end with, so
+# classify() names the specific unit; "_eps" gates like "_qps"
+SUFFIXES = ("_p50_us", "_p99_us", "_us", "_x", "_qps", "_eps",
+            "_ratio", "_count")
+GATED_PREFIXES = ("engine_", "stream_")
 
 # must precede any jax import (bench rows depend on the device count)
 if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -78,16 +94,18 @@ def main() -> int:
         print("bench_gate: no committed BENCH_results.json — gating "
               "only the within-run _x floors")
 
-    from benchmarks import bench_engine, common
+    from benchmarks import bench_engine, bench_stream, common
 
     print("bench_gate: running bench_engine --smoke ...")
     bench_engine.run(smoke=True)
+    print("bench_gate: running bench_stream --smoke ...")
+    bench_stream.run(smoke=True)
     fresh = dict(common.RESULTS)
 
     failures: list[str] = []
     for name, val in sorted(fresh.items()):
         kind = classify(name)
-        if not name.startswith("engine_"):
+        if not name.startswith(GATED_PREFIXES):
             continue  # kernel_/compact_ rows: tracked, not gated
         if not kind:
             failures.append(
@@ -103,7 +121,7 @@ def main() -> int:
             if val < floor:
                 failures.append(
                     f"{name}: {val:.2f}x below the {floor}x floor")
-        elif kind == "_us":
+        elif kind in ("_us", "_p50_us", "_p99_us"):
             base = committed.get(name)
             if base is None:
                 print(f"bench_gate: {name}: no committed baseline "
@@ -117,19 +135,20 @@ def main() -> int:
                 failures.append(
                     f"{name}: {val:.1f}us smoke > {THRESHOLD}x "
                     f"committed {base:.1f}us ({ratio:.2f}x)")
-        elif kind == "_qps":
+        elif kind in ("_qps", "_eps"):
             base = committed.get(name)
             if base is None:
                 print(f"bench_gate: {name}: no committed baseline "
                       "(new row) — skipped")
                 continue
             floor = base / THRESHOLD
+            unit = "q/s" if kind == "_qps" else "entries/s"
             status = "FAIL" if val < floor else "ok"
-            print(f"bench_gate: {name}: smoke {val:.1f} q/s vs "
+            print(f"bench_gate: {name}: smoke {val:.1f} {unit} vs "
                   f"committed {base:.1f} (floor {floor:.1f}) {status}")
             if val < floor:
                 failures.append(
-                    f"{name}: {val:.1f} q/s below committed/"
+                    f"{name}: {val:.1f} {unit} below committed/"
                     f"{THRESHOLD} = {floor:.1f}")
         else:  # _ratio / _count: informational
             print(f"bench_gate: {name}: {val:g} ({kind[1:]}) — "

@@ -120,6 +120,39 @@ def worker(process_id: int, port: int) -> None:
     print(f"worker {process_id}: multiq OK (Q={len(queries)} batched "
           f"masks == serial loop across {NUM_PROCESSES} processes)")
 
+    # streamed TOP-N: micro-batches folded into donated mesh-resident
+    # lane state on the same 8-device global mesh; the periodic
+    # cross-lane merge (one fused all_gather inside shard_map) and the
+    # close() replication cross the gloo process boundary. merge_every
+    # is an explicit int — "auto" runs a timing calibration that the
+    # two processes could resolve differently.
+    from repro.core.streaming import PruneStream, lane_view
+
+    sizes = [1024, 1024, 1024, 1024]
+    stream = PruneStream("topn_det", shards=SHARDS, mesh=mesh,
+                         merge_every=2, window=2, N=N, w=8)
+    lo = 0
+    for b in sizes:
+        stream.fold(host[lo:lo + b])
+        lo += b
+    res = stream.close()
+    assert stream.stats["merges"] >= 2, stream.stats
+    lv, valid, arrival = lane_view("topn_det", (host,), sizes, SHARDS,
+                                   N=N, w=8)
+    one = engine_prune("topn_det", *lv, mode="two_pass", shards=SHARDS,
+                       N=N, w=8)
+    got = np.asarray(res.keep)[arrival[valid]]
+    want = np.asarray(one.keep)[valid]
+    assert (got == want).all(), \
+        "streamed close() mask != one-shot across processes"
+    # live masks (judged against 2-batch-stale snapshots) stay safe
+    live = np.asarray(res.live_keep)
+    assert np.isin(np.sort(host)[-N:], host[live]).all(), \
+        "streamed live mask pruned a true top-N entry"
+    print(f"worker {process_id}: stream OK ({len(sizes)} folds, "
+          f"{stream.stats['merges']} cross-process merges, close() == "
+          f"one-shot, kept {int(got.sum())}/{M})")
+
 
 def main() -> int:
     if "--worker" in sys.argv:

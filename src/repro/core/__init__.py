@@ -26,12 +26,15 @@ from .engine import (ALGORITHMS, MODES, MODES_BATCH, PASS2,
                      default_mesh, engine_prune, engine_prune_batch,
                      merge_states, shard_stack, unshard_mask,
                      unshard_mask_batch)
+from .streaming import (PruneStream, StreamResult, engine_prune_stream,
+                        lane_view)
 from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       pack_queries, rule_count, PackingPlan,
                       MultiSwitchPlan, plan_multi_switch, optimal_shards,
                       optimal_pass2, pass2_time, MEASURED_MERGE_COSTS,
                       QueryBatchPlan, plan_query_batch,
-                      RESIDENT_OVERHEAD_ENTRIES)
+                      RESIDENT_OVERHEAD_ENTRIES, optimal_merge_interval,
+                      DEFAULT_STALENESS_RATE)
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

@@ -74,11 +74,16 @@ def _step(policy: str, state: DistinctState, x: jnp.ndarray, row: jnp.ndarray):
 
 @partial(jax.jit, static_argnames=("d", "w", "policy", "seed"))
 def distinct_prune(values: jnp.ndarray, *, d: int, w: int, policy: str = "lru",
-                   seed: int = 0) -> PruneResult:
+                   seed: int = 0,
+                   state: DistinctState | None = None) -> PruneResult:
     """Stream `values` (uint32[m] (finger)prints) through the d×w cache.
 
     keep[i] is True iff value i was NOT found in its row cache — i.e. the
     switch forwards it. Exact sequential semantics via lax.scan.
+
+    state: resume from a prior call's final state — scanning a stream in
+    micro-batches with the carried state is bit-identical to one scan
+    over the concatenation (the streaming engine's fold step).
     """
     rows = hash_mod(values, d, seed=seed)
 
@@ -86,7 +91,8 @@ def distinct_prune(values: jnp.ndarray, *, d: int, w: int, policy: str = "lru",
         x, r = xr
         return _step(policy, state, x, r)
 
-    state, keep = jax.lax.scan(body, init_state(d, w), (values, rows))
+    init = init_state(d, w) if state is None else state
+    state, keep = jax.lax.scan(body, init, (values, rows))
     return PruneResult(keep=keep, state=state)
 
 

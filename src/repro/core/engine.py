@@ -108,13 +108,15 @@ from jax.sharding import PartitionSpec as P
 from .. import compat
 from ..constants import NEG
 from .distinct import distinct_prune
-from .groupby import GroupByState, groupby_prune
+from .distinct import init_state as distinct_init
+from .groupby import GroupByState, groupby_init, groupby_prune
 from .hashing import hash_mod
-from .having import having_prune
+from .having import having_init, having_prune
 from .pruning import PruneResult
 from .sketches import CountMin
-from .skyline import SkylineState, skyline_prune
-from .topn import TopNRandState, topn_det_prune, topn_rand_prune
+from .skyline import SkylineState, skyline_init, skyline_prune
+from .topn import (TopNRandState, topn_det_init, topn_det_prune,
+                   topn_rand_init, topn_rand_prune)
 from . import batched, planner
 
 MODES = ("scan", "sharded", "two_pass", "mesh")
@@ -171,12 +173,18 @@ class _AlgoSpec:
     pads(streams, params)            -> per-stream pad fill values
     merge(stacked_states, params)    -> merged global state
     apply(merged, shard_streams, shard_keep, params) -> keep bool[S, n]
+    resume(state, streams, params)   -> PruneResult (scan from `state`;
+        bit-identical continuation — the streaming fold step)
+    init(streams, params)            -> one lane's empty switch state
+        (streams are example arrays consulted for dtypes/trailing dims)
     """
 
     scan: Callable[[tuple, dict], PruneResult]
     pads: Callable[[tuple, dict], tuple]
     merge: Callable[[Any, dict], Any]
     apply: Callable[[Any, tuple, jnp.ndarray, dict], jnp.ndarray]
+    resume: Callable[[Any, tuple, dict], PruneResult] | None = None
+    init: Callable[[tuple, dict], Any] | None = None
     # True when shard-local keep decisions are unsafe without the merged
     # global state (HAVING: a key's global sum can clear the threshold
     # while every shard-local estimate stays below it). `sharded` then
@@ -205,6 +213,15 @@ def _topn_det_scan(streams, p):
     return topn_det_prune(streams[0], N=p["N"], w=p.get("w", 4))
 
 
+def _topn_det_resume(state, streams, p):
+    return topn_det_prune(streams[0], N=p["N"], w=p.get("w", 4),
+                          state=state)
+
+
+def _topn_det_init(streams, p):
+    return topn_det_init(p.get("w", 4))
+
+
 def _topn_det_merge(st, p):
     # same math as the scan body: thr = t0 * 2^cur_level (NEG: no level)
     thr = jnp.where(st.cur_level >= 0,
@@ -224,6 +241,18 @@ def _topn_rand_scan(streams, p):
                            seed=p.get("seed", 0))
 
 
+def _topn_rand_resume(state, streams, p):
+    # the row hash is positional over the lane-local stream index, so the
+    # resumed scan needs the per-lane entry count consumed so far
+    return topn_rand_prune(streams[0], d=p["d"], w=p["w"],
+                           seed=p.get("seed", 0), state=state,
+                           index_offset=p.get("_index_offset", 0))
+
+
+def _topn_rand_init(streams, p):
+    return topn_rand_init(p["d"], p["w"])
+
+
 def _topn_rand_merge(st, p):
     # per-row top-w of the union of the shard rows (descending), i.e.
     # exactly the state a single switch holding d rows of width w would
@@ -236,9 +265,12 @@ def _topn_rand_apply(merged, streams, keep1, p):
     del keep1
     x = streams[0].astype(jnp.float32)  # [S, n]
     n = x.shape[-1]
-    # shards replay the scan's shard-local row assignment (stream index)
-    rows = hash_mod(jnp.arange(n, dtype=jnp.uint32), p["d"],
-                    seed=p.get("seed", 0))
+    # shards replay the scan's shard-local row assignment (stream index);
+    # a streaming refresh applies to one micro-batch's chunk, whose lane-
+    # local positions start at _index_offset, not 0
+    idx = (jnp.arange(n, dtype=jnp.uint32)
+           + jnp.asarray(p.get("_index_offset", 0), jnp.uint32))
+    rows = hash_mod(idx, p["d"], seed=p.get("seed", 0))
     return x >= merged.vals[:, -1][rows][None, :]
 
 
@@ -247,6 +279,16 @@ def _distinct_scan(streams, p):
     return distinct_prune(streams[0], d=p["d"], w=p["w"],
                           policy=p.get("policy", "lru"),
                           seed=p.get("seed", 0))
+
+
+def _distinct_resume(state, streams, p):
+    return distinct_prune(streams[0], d=p["d"], w=p["w"],
+                          policy=p.get("policy", "lru"),
+                          seed=p.get("seed", 0), state=state)
+
+
+def _distinct_init(streams, p):
+    return distinct_init(p["d"], p["w"])
 
 
 def _distinct_merge(st, p):
@@ -280,6 +322,15 @@ def _skyline_scan(streams, p):
     return skyline_prune(streams[0], w=p["w"], score=p.get("score", "aph"))
 
 
+def _skyline_resume(state, streams, p):
+    return skyline_prune(streams[0], w=p["w"],
+                         score=p.get("score", "aph"), state=state)
+
+
+def _skyline_init(streams, p):
+    return skyline_init(p["w"], streams[0].shape[-1])
+
+
 def _skyline_merge(st, p):
     S, w, D = st.points.shape
     pts = st.points.reshape(S * w, D)
@@ -307,6 +358,18 @@ def _groupby_scan(streams, p):
                          agg=p.get("agg", "sum"), seed=p.get("seed", 0))
 
 
+def _groupby_resume(state, streams, p):
+    valid = streams[2] if len(streams) > 2 else None
+    return groupby_prune(streams[0], streams[1], valid=valid,
+                         d=p["d"], w=p["w"],
+                         agg=p.get("agg", "sum"), seed=p.get("seed", 0),
+                         state=state)
+
+
+def _groupby_init(streams, p):
+    return groupby_init(p["d"], p["w"], p.get("agg", "sum"))
+
+
 def _groupby_merge(st, p):
     # cache-column union: the master's fold is a commutative monoid, so
     # duplicate keys across shard columns fold exactly in completion.
@@ -326,6 +389,21 @@ def _having_scan(streams, p):
     return having_prune(streams[0], values, p["threshold"],
                         rows=p.get("rows", 3), width=p.get("width", 1024),
                         agg=p.get("agg", "sum"), seed=p.get("seed", 0))
+
+
+def _having_resume(state, streams, p):
+    values = streams[1] if len(streams) > 1 else None
+    return having_prune(streams[0], values, p["threshold"],
+                        rows=p.get("rows", 3), width=p.get("width", 1024),
+                        agg=p.get("agg", "sum"), seed=p.get("seed", 0),
+                        state=state)
+
+
+def _having_init(streams, p):
+    dtype = (jnp.int32 if p.get("agg", "sum") == "count"
+             or len(streams) < 2 else streams[1].dtype)
+    return having_init(rows=p.get("rows", 3), width=p.get("width", 1024),
+                       seed=p.get("seed", 0), dtype=dtype)
 
 
 def _having_merge(st, p):
@@ -374,20 +452,26 @@ def _having_pads(streams, p):
 
 _SPECS: dict[str, _AlgoSpec] = {
     "topn_det": _AlgoSpec(_topn_det_scan, _value_pads,
-                          _topn_det_merge, _topn_det_apply),
+                          _topn_det_merge, _topn_det_apply,
+                          resume=_topn_det_resume, init=_topn_det_init),
     "topn_rand": _AlgoSpec(_topn_rand_scan, _value_pads,
-                           _topn_rand_merge, _topn_rand_apply),
+                           _topn_rand_merge, _topn_rand_apply,
+                           resume=_topn_rand_resume, init=_topn_rand_init),
     "distinct": _AlgoSpec(_distinct_scan, _fingerprint_pads,
                           _distinct_merge, _distinct_apply,
+                          resume=_distinct_resume, init=_distinct_init,
                           chunkable=True),
     "skyline": _AlgoSpec(_skyline_scan, _skyline_pads,
                          _skyline_merge, _skyline_apply,
+                         resume=_skyline_resume, init=_skyline_init,
                          chunkable=True),
     "groupby": _AlgoSpec(_groupby_scan, _groupby_pads,
                          _groupby_merge, _groupby_apply,
+                         resume=_groupby_resume, init=_groupby_init,
                          pad_validity=True),
     "having": _AlgoSpec(_having_scan, _having_pads,
                         _having_merge, _having_apply,
+                        resume=_having_resume, init=_having_init,
                         sharded_needs_merge=True),
 }
 

@@ -39,10 +39,19 @@ class GroupByState:
     valid: jnp.ndarray  # bool[d, w]
 
 
+def groupby_init(d: int, w: int, agg: str = "sum") -> GroupByState:
+    return GroupByState(
+        keys=jnp.zeros((d, w), jnp.uint32),
+        aggs=jnp.full((d, w), jnp.float32(_INIT[agg]), jnp.float32),
+        valid=jnp.zeros((d, w), jnp.bool_),
+    )
+
+
 @partial(jax.jit, static_argnames=("d", "w", "agg", "seed"))
 def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray,
                   valid: jnp.ndarray | None = None, *, d: int, w: int,
-                  agg: str = "sum", seed: int = 0) -> PruneResult:
+                  agg: str = "sum", seed: int = 0,
+                  state: GroupByState | None = None) -> PruneResult:
     """Returns keep mask + emitted (evicted_key, evicted_agg, evicted_valid).
 
     valid: optional bool[m] entry-validity column. Entries with
@@ -50,6 +59,10 @@ def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray,
     insertion, no eviction) — the hook sharded execution uses to make
     tail pads inert under *every* aggregate, including COUNT, which has
     no neutral pad value (each entry folds +1 regardless of its value).
+
+    state: resume from a prior call's final cache — partials folded in an
+    earlier micro-batch keep aggregating, and evictions of carried
+    partials are emitted exactly as in one scan over the concatenation.
     """
     fold = _FOLD[agg]
     init_v = jnp.float32(_INIT[agg])
@@ -81,11 +94,7 @@ def groupby_prune(keys: jnp.ndarray, values: jnp.ndarray,
         # entry is always absorbed (pruned); evictions are the traffic
         return state, (jnp.bool_(False), ev_k, ev_a, ev_valid)
 
-    init = GroupByState(
-        keys=jnp.zeros((d, w), jnp.uint32),
-        aggs=jnp.full((d, w), init_v, jnp.float32),
-        valid=jnp.zeros((d, w), jnp.bool_),
-    )
+    init = groupby_init(d, w, agg) if state is None else state
     state, (keep, ev_k, ev_a, ev_valid) = jax.lax.scan(
         body, init, (keys, rows, values.astype(jnp.float32), valid))
     return PruneResult(keep=keep, state=state, emitted=(ev_k, ev_a, ev_valid))

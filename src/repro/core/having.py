@@ -17,17 +17,32 @@ from .pruning import PruneResult
 from .sketches import CountMin, cms_build, cms_query
 
 
+def having_init(rows: int = 3, width: int = 1024, seed: int = 0,
+                dtype=jnp.int32) -> CountMin:
+    """Empty sketch; ``dtype`` must match the fold's weights (int32 for
+    COUNT, the values dtype for SUM)."""
+    return CountMin(table=jnp.zeros((rows, width), dtype), seed=seed)
+
+
 @partial(jax.jit, static_argnames=("rows", "width", "agg", "seed"))
 def having_prune(keys: jnp.ndarray, values: jnp.ndarray | None, threshold, *,
                  rows: int = 3, width: int = 1024, agg: str = "sum",
-                 seed: int = 0) -> PruneResult:
+                 seed: int = 0, state: CountMin | None = None) -> PruneResult:
     """First pass: sketch f per key; keep[i]=True iff est(key_i) > threshold.
 
     Entries of qualifying keys are re-streamed in the paper's partial
     second pass — `keep` marks exactly those (the switch blocks the rest).
+
+    state: a carried sketch to fold this batch into. CMS build is an
+    order-independent scatter-add, so summing per-batch tables equals one
+    build over the concatenation; `keep` is judged against the *running*
+    estimate, which underestimates the final one — streaming callers must
+    not prune on it mid-stream (see core/streaming.py).
     """
     weights = None if agg == "count" else values
     sketch = cms_build(keys, weights, rows, width, seed=seed)
+    if state is not None:
+        sketch = CountMin(table=state.table + sketch.table, seed=seed)
     est = cms_query(sketch, keys)
     keep = est > threshold
     return PruneResult(keep=keep, state=sketch)

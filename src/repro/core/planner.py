@@ -353,6 +353,42 @@ def optimal_shards(m: int, state_bytes: int, max_shards: int = 4096,
     return max(1, min(s, max_shards))
 
 
+# --------------------------------------------------- streaming merge period
+# Marginal unpruned fraction added per micro-batch of merged-state
+# staleness: with the cross-lane merge K batches old, lanes prune on a
+# looser (older) global state and ship ~σ·b extra entries per batch of
+# lag. Default is a conservative prior; benchmarks/bench_stream.py
+# measures the real slope (the `stream_*_stale_unpruned_ratio` rows).
+DEFAULT_STALENESS_RATE = 2e-3
+MAX_MERGE_INTERVAL = 64
+
+
+def optimal_merge_interval(batch_entries: int, merge_cost_entries: float,
+                           staleness_rate: float = DEFAULT_STALENESS_RATE,
+                           ship_entry_cost: float = 1.0,
+                           max_interval: int = MAX_MERGE_INTERVAL) -> int:
+    """Merge period K* for the streaming engine's cross-lane merge.
+
+    Per-batch cost of merging every K micro-batches, in per-entry units
+    (the same currency as ``optimal_shards``'s T(S)):
+
+        T(K) = merge_cost_entries / K                  (amortized merge)
+             + staleness_rate · ship_entry_cost
+               · batch_entries · (K - 1) / 2           (mean staleness lag)
+
+    The first term is the fused all_gather + ``merge_states`` fold paid
+    once per K batches; the second charges the extra unpruned entries a
+    stale merged state lets through (average lag (K-1)/2 batches).
+    Minimizing gives K* = sqrt(2·merge / (σ·c_ship·b)), clamped to
+    [1, max_interval].
+    """
+    denom = staleness_rate * ship_entry_cost * max(batch_entries, 1)
+    if denom <= 0:
+        return max_interval
+    k = math.sqrt(2.0 * max(merge_cost_entries, 0.0) / denom)
+    return max(1, min(int(round(k)), max_interval))
+
+
 def rule_count(algo: str, **p) -> int:
     """Control-plane rules per query: 10-20 (paper §7.1)."""
     base = {"distinct_lru": 12, "distinct_fifo": 12, "topn_det": 14,

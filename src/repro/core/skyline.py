@@ -61,9 +61,19 @@ class SkylineState:
     scores: jnp.ndarray  # f32[w]    (NEG = empty slot)
 
 
+def skyline_init(w: int, D: int) -> SkylineState:
+    return SkylineState(points=jnp.zeros((w, D), jnp.float32),
+                        scores=jnp.full((w,), NEG, jnp.float32))
+
+
 @partial(jax.jit, static_argnames=("w", "score"))
-def skyline_prune(points: jnp.ndarray, *, w: int, score: str = "aph") -> PruneResult:
-    """Stream points (f32/int[m, D], maximizing all dims) through w stages."""
+def skyline_prune(points: jnp.ndarray, *, w: int, score: str = "aph",
+                  state: SkylineState | None = None) -> PruneResult:
+    """Stream points (f32/int[m, D], maximizing all dims) through w stages.
+
+    ``state`` resumes a prior scan: micro-batched folds with the carried
+    state match one scan over the concatenation bit for bit.
+    """
     h = _SCORES[score]
     D = points.shape[-1]
     idx = jnp.arange(w)
@@ -84,8 +94,7 @@ def skyline_prune(points: jnp.ndarray, *, w: int, score: str = "aph") -> PruneRe
                             jnp.where(idx > pos, jnp.roll(scs, 1), scs))
         return SkylineState(new_pts, new_scs), ~pruned
 
-    init = SkylineState(points=jnp.zeros((w, D), jnp.float32),
-                        scores=jnp.full((w,), NEG, jnp.float32))
+    init = skyline_init(w, D) if state is None else state
     state, keep = jax.lax.scan(body, init, points.astype(jnp.float32))
     return PruneResult(keep=keep, state=state)
 

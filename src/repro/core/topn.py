@@ -30,13 +30,26 @@ class TopNRandState:
     vals: jnp.ndarray  # f32[d, w] per-row descending rolling top-w
 
 
+def topn_rand_init(d: int, w: int) -> TopNRandState:
+    return TopNRandState(vals=jnp.full((d, w), NEG, jnp.float32))
+
+
 @partial(jax.jit, static_argnames=("d", "w", "seed"))
-def topn_rand_prune(values: jnp.ndarray, *, d: int, w: int, seed: int = 0) -> PruneResult:
-    """Randomized TOP-N matrix (Fig. 2). values: f32[m] (larger = better)."""
+def topn_rand_prune(values: jnp.ndarray, *, d: int, w: int, seed: int = 0,
+                    state: TopNRandState | None = None,
+                    index_offset=0) -> PruneResult:
+    """Randomized TOP-N matrix (Fig. 2). values: f32[m] (larger = better).
+
+    state/index_offset: resume a prior scan. The row assignment hashes the
+    *stream index*, so a resumed call must know how many entries the
+    carried state has already consumed — pass the running count as
+    ``index_offset`` (traced, so varying offsets reuse one executable).
+    """
     m = values.shape[0]
     # the paper assigns each entry a uniformly random row; we hash the
     # stream index (not the value) so duplicates spread across rows.
-    rows = hash_mod(jnp.arange(m, dtype=jnp.uint32), d, seed=seed)
+    rows = hash_mod(jnp.arange(m, dtype=jnp.uint32)
+                    + jnp.asarray(index_offset, jnp.uint32), d, seed=seed)
 
     def body(vals, xr):
         x, r = xr
@@ -51,7 +64,7 @@ def topn_rand_prune(values: jnp.ndarray, *, d: int, w: int, seed: int = 0) -> Pr
         new_row = jnp.where(keep, new_row, row)
         return vals.at[r].set(new_row), keep
 
-    init = jnp.full((d, w), NEG, jnp.float32)
+    init = (topn_rand_init(d, w) if state is None else state).vals
     vals, keep = jax.lax.scan(body, init, (values.astype(jnp.float32), rows))
     return PruneResult(keep=keep, state=TopNRandState(vals))
 
@@ -91,13 +104,22 @@ class TopNDetState:
     cur_level: jnp.ndarray # int32 — highest i with counts[i] >= N (-1: none)
 
 
+def topn_det_init(w: int = 4) -> TopNDetState:
+    return TopNDetState(
+        t0=jnp.float32(POS), counts=jnp.zeros(w, jnp.int32),
+        seen=jnp.int32(0), cur_level=jnp.int32(-1),
+    )
+
+
 @partial(jax.jit, static_argnames=("N", "w"))
-def topn_det_prune(values: jnp.ndarray, *, N: int, w: int = 4) -> PruneResult:
+def topn_det_prune(values: jnp.ndarray, *, N: int, w: int = 4,
+                   state: TopNDetState | None = None) -> PruneResult:
     """Deterministic threshold-ladder TOP-N (Ex. 3). values must be > 0.
 
     Thresholds t_i = 2^i * t0. The switch prunes v < t_{cur}; during the
     first N entries nothing is pruned. Guarantees a superset of the true
-    top-N survives.
+    top-N survives. ``state`` resumes a prior scan (the warmup counter
+    rides in the state, so resumed micro-batches never re-warm).
     """
     v = values.astype(jnp.float32)
 
@@ -114,10 +136,7 @@ def topn_det_prune(values: jnp.ndarray, *, N: int, w: int = 4) -> PruneResult:
         keep = warm | (x >= thr)
         return TopNDetState(t0=t0, counts=counts, seen=s.seen + 1, cur_level=cur), keep
 
-    init = TopNDetState(
-        t0=jnp.float32(POS), counts=jnp.zeros(w, jnp.int32),
-        seen=jnp.int32(0), cur_level=jnp.int32(-1),
-    )
+    init = topn_det_init(w) if state is None else state
     state, keep = jax.lax.scan(body, init, v)
     return PruneResult(keep=keep, state=state)
 

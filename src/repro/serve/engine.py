@@ -6,11 +6,19 @@ sharded over the model axis, the exact global top-k needs a full [B, V]
 gather. Instead each shard forwards only its local top-k candidates —
 a provable superset of the global top-k (any global top-k element is a
 local top-k element of its shard) — and the "master" finishes on n_shards
-× k candidates. The wire sees k·shards values instead of V.
+× k candidates. The wire sees k·shards values instead of V. On top of
+that per-step pruning, ``generate(..., track_topn=N)`` folds every
+step's candidate wire into a streaming TOP-N switch
+(``core.PruneStream``) — a *global* top-N over the whole generation,
+resolved exactly at the end without ever materializing the [steps, B, V]
+logit history.
 
 Request dedup (Ex. 2/8): prompts are fingerprinted (kernels.ops hashing)
-and streamed through the DISTINCT cache so repeated prompts hit a
-response cache instead of the model.
+and folded into a **persistent** streaming DISTINCT cache so repeated
+prompts hit a response cache instead of the model. The switch state is
+carried across calls — a duplicate arriving in a *later* batch than its
+first occurrence is still pruned (the old one-shot ``distinct_prune``
+per call rebuilt the cache from scratch and missed exactly that case).
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distinct_prune, fingerprint
+from repro.core import fingerprint, master_complete_topn
+from repro.core.streaming import PruneStream
 from repro.models.common import Rules
 
 
@@ -43,18 +52,54 @@ def pruned_topk(logits: jnp.ndarray, k: int, n_shards: int):
 
 
 @dataclasses.dataclass
+class TopNTrace:
+    """Global top-N over a generation's candidate wire.
+
+    values: f32[N] descending; entries: total candidates folded;
+    shipped: candidates the streaming switch would have forwarded
+    upstream (live mask) — the wire saving is 1 - shipped/entries.
+    """
+
+    values: np.ndarray
+    entries: int
+    shipped: int
+
+
+@dataclasses.dataclass
 class RequestCache:
     """DISTINCT-pruned request queue: repeated prompts are served from
-    cache. d×w LRU cache on 32-bit prompt fingerprints (switch state)."""
+    cache. d×w LRU cache on 32-bit prompt fingerprints, held as
+    *streaming* switch state — one resident lane folded per ``dedup``
+    call, so dedup works across batches, not just within one."""
     d: int = 256
     w: int = 4
     _responses: dict = dataclasses.field(default_factory=dict)
+    _stream: PruneStream | None = dataclasses.field(default=None,
+                                                    repr=False)
+
+    def _ensure_stream(self) -> PruneStream:
+        if self._stream is None:
+            # one lane: dedup is a sequential queue; retain=False keeps
+            # the unbounded request stream from accumulating
+            self._stream = PruneStream("distinct", shards=1,
+                                       merge_every=1, retain=False,
+                                       d=self.d, w=self.w)
+        return self._stream
 
     def dedup(self, prompts: list) -> tuple[list, list]:
         fps = [self._fp(p) for p in prompts]
-        keep = distinct_prune(jnp.asarray(fps, jnp.uint32), d=self.d, w=self.w).keep
-        fresh = [p for p, k in zip(prompts, np.asarray(keep)) if k]
+        if not prompts:
+            return [], fps
+        stream = self._ensure_stream()
+        t = stream.fold(np.asarray(fps, np.uint32))
+        keep = np.asarray(stream.live_mask(t))
+        fresh = [p for p, k in zip(prompts, keep) if k]
         return fresh, fps
+
+    def reset(self):
+        """Drop the switch state (not the response cache)."""
+        if self._stream is not None:
+            self._stream.reset()
 
     @staticmethod
     def _fp(prompt: str) -> int:
@@ -85,7 +130,11 @@ class ServeEngine:
     topk: int = 8
 
     def generate(self, prompt_tokens: jnp.ndarray, max_new: int,
-                 enc_inputs=None) -> np.ndarray:
+                 enc_inputs=None, track_topn: int | None = None):
+        """Greedy decode. Returns np.int32[B, max_new] tokens; with
+        ``track_topn=N`` returns ``(tokens, TopNTrace)`` — the exact
+        global top-N candidate logits across all decode steps, tracked
+        by an async streaming fold off the decode hot path."""
         B, S = prompt_tokens.shape
         cache, _ = self.lm.init_cache(B, S + max_new)
         enc_out = None
@@ -96,6 +145,11 @@ class ServeEngine:
                                               prompt_tokens, self.rules)
         tok = prompt_tokens[:, -1]
         out = []
+        tracker = cands = None
+        if track_topn:
+            tracker = PruneStream("topn_det", shards=1, merge_every=1,
+                                  N=track_topn, w=8)
+            cands = []
 
         @jax.jit
         def step(params, cache, tok, pos):
@@ -104,9 +158,24 @@ class ServeEngine:
             V = lg.shape[-1]
             shards = self.n_logit_shards if V % self.n_logit_shards == 0 else 1
             _, idx = pruned_topk(lg, 1, shards)
-            return idx[:, 0].astype(jnp.int32), cache
+            # the pruned wire: each vocab shard's local top-k candidates
+            Vs = V // shards
+            cand_v, _ = jax.lax.top_k(lg.reshape(B, shards, Vs), self.topk)
+            return idx[:, 0].astype(jnp.int32), cand_v.reshape(-1), cache
 
         for t in range(max_new):
-            tok, cache = step(self.params, cache, tok, S + t - 1)
+            tok, cand_v, cache = step(self.params, cache, tok, S + t - 1)
             out.append(np.asarray(tok))
-        return np.stack(out, axis=1)
+            if tracker is not None:
+                tracker.fold(cand_v)   # async; bounded in-flight window
+                cands.append(cand_v)
+        tokens = np.stack(out, axis=1)
+        if tracker is None:
+            return tokens
+        res = tracker.close()
+        all_c = jnp.concatenate(cands)
+        vals, _ = master_complete_topn(all_c, res.keep, track_topn)
+        trace = TopNTrace(values=np.asarray(vals),
+                          entries=int(res.keep.shape[0]),
+                          shipped=int(np.asarray(res.live_keep).sum()))
+        return tokens, trace

@@ -36,6 +36,44 @@ def test_request_cache_dedup():
     assert rc.get(fps[2]) == "answer1"  # same prompt → cached response
 
 
+def test_request_cache_dedup_across_batches():
+    """Regression: the DISTINCT switch state must persist across calls.
+
+    The old implementation re-ran one-shot distinct_prune per dedup()
+    call, so a duplicate arriving in a *later* batch than its first
+    occurrence was never pruned."""
+    rc = RequestCache()
+    fresh1, fps1 = rc.dedup(["q1", "q2"])
+    assert fresh1 == ["q1", "q2"]
+    fresh2, fps2 = rc.dedup(["q1", "q3", "q2"])   # q1/q2 seen last batch
+    assert fresh2 == ["q3"]
+    fresh3, _ = rc.dedup(["q3"])
+    assert fresh3 == []
+    rc.put(fps1[0], "answer1")
+    assert rc.get(fps2[0]) == "answer1"           # same prompt, same fp
+    rc.reset()                                     # state drop → fresh again
+    fresh4, _ = rc.dedup(["q1"])
+    assert fresh4 == ["q1"]
+
+
+def test_generate_tracks_global_topn():
+    """track_topn folds every step's candidate wire into a streaming
+    TOP-N switch; the completed trace is the exact top-N over all
+    folded candidates."""
+    cfg = get_smoke("qwen3-1.7b")
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.key(4))
+    eng = ServeEngine(lm, params, n_logit_shards=16)
+    toks = jnp.asarray(np.random.default_rng(3)
+                       .integers(0, cfg.vocab, (2, 5)).astype(np.int32))
+    out, trace = eng.generate(toks, max_new=4, track_topn=10)
+    out_plain = eng.generate(toks, max_new=4)
+    np.testing.assert_array_equal(out, out_plain)  # tracking is passive
+    assert trace.values.shape == (10,)
+    assert (np.diff(trace.values) <= 0).all()      # descending
+    assert 0 < trace.shipped <= trace.entries
+
+
 def test_generate_deterministic():
     cfg = get_smoke("qwen3-1.7b")
     lm = LM(cfg)

@@ -1,0 +1,258 @@
+"""Streaming engine (core/streaming.py) vs the one-shot engine.
+
+The equivalence contract: a PruneStream's close() mask is bit-identical
+to one-shot ``engine_prune(mode="two_pass")`` over the *lane-view*
+stream (each micro-batch split into S contiguous chunks, chunk j
+extending lane j — ``lane_view`` reconstructs that stream and the
+arrival-order permutation) at ANY merge interval, because close()
+re-filters every batch against the final merged state. The live masks
+are supersets judged against possibly-stale merged snapshots; at
+merge_every=1 each batch's live mask equals the one-shot mask of the
+lane-view prefix.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import opt_keep_distinct, skyline_oracle
+from repro.core.engine import engine_prune
+from repro.core.groupby import groupby_oracle, master_complete_groupby
+from repro.core.pruning import PruneResult
+from repro.core.streaming import (PruneStream, engine_prune_stream,
+                                  lane_view)
+from repro.core import planner
+
+SHARDS = 8
+# mixed micro-batch sizes, divisible and ragged (mid-stream AND final)
+SIZES = [512, 384, 250, 384, 518]
+M = sum(SIZES)
+
+
+def _streams(algo, rng, m=M):
+    if algo in ("topn_det", "topn_rand"):
+        return (rng.random(m).astype(np.float32) * 1e4 + 1,)
+    if algo == "distinct":
+        return (rng.integers(1, 400, m).astype(np.uint32),)
+    if algo == "skyline":
+        return (rng.random((m, 3)).astype(np.float32) * 100,)
+    # integer-valued data keeps every fold order-exact (no f32 reorder)
+    return (rng.integers(0, 64, m).astype(np.uint32),
+            rng.integers(1, 50, m).astype(np.int32))
+
+
+PARAMS = {
+    "topn_det": dict(N=50, w=8),
+    "topn_rand": dict(d=128, w=4),
+    "distinct": dict(d=64, w=4),
+    "skyline": dict(w=8),
+    "groupby": dict(d=16, w=4, agg="count"),
+    "having": dict(threshold=40, rows=3, width=512, agg="count"),
+}
+
+
+def _run_stream(algo, streams, sizes, **kw):
+    stream = PruneStream(algo, shards=SHARDS, **kw, **PARAMS[algo])
+    lo = 0
+    for b in sizes:
+        stream.fold(*(s[lo:lo + b] for s in streams))
+        lo += b
+    return stream, stream.close()
+
+
+def _one_shot(algo, streams, sizes):
+    lv, valid, arrival = lane_view(algo, streams, sizes, SHARDS,
+                                   **PARAMS[algo])
+    one = engine_prune(algo, *lv, mode="two_pass", shards=SHARDS,
+                       **PARAMS[algo])
+    return one, valid, arrival
+
+
+@pytest.mark.parametrize("algo", list(PARAMS))
+@pytest.mark.parametrize("merge_every", [1, 3])
+def test_stream_matches_one_shot(algo, merge_every):
+    """close().keep == one-shot two_pass, bit for bit, at K=1 and K=3
+    (ragged mid-stream and final micro-batches included)."""
+    rng = np.random.default_rng(0)
+    streams = _streams(algo, rng)
+    _, res = _run_stream(algo, streams, SIZES, merge_every=merge_every)
+    one, valid, arrival = _one_shot(algo, streams, SIZES)
+    got = np.asarray(res.keep)[arrival[valid]]
+    want = np.asarray(one.keep)[valid]
+    np.testing.assert_array_equal(got, want)
+    # live masks only ever loosen for threshold queries: a stale (lower)
+    # TOP-N threshold ships everything the final one admits. (Evicting
+    # caches — distinct/topn_rand — can resurrect entries at close, so
+    # their safety contract is live ⊇ OPT, tested separately below.)
+    if algo in ("topn_det", "having"):
+        live = np.asarray(res.live_keep)
+        assert live[np.asarray(res.keep)].all()
+
+
+def test_stream_live_prefix_equality_merge_every_batch():
+    """At merge_every=1 each batch's live mask equals the one-shot mask
+    of the lane-view prefix through that batch (the streamed switch is
+    exactly as tight as a one-shot engine run on what it has seen)."""
+    rng = np.random.default_rng(1)
+    for algo in ("topn_det", "distinct"):
+        streams = _streams(algo, rng)
+        stream, res = _run_stream(algo, streams, SIZES, merge_every=1)
+        lo = 0
+        for t, b in enumerate(SIZES):
+            pre = tuple(s[:lo + b] for s in streams)
+            one, valid, arrival = _one_shot(algo, pre, SIZES[:t + 1])
+            pos = (arrival >= lo) & valid         # this batch's entries
+            live_t = np.asarray(stream.live_mask(t))
+            np.testing.assert_array_equal(
+                live_t[arrival[pos] - lo], np.asarray(one.keep)[pos],
+                err_msg=f"{algo} batch {t}")
+            lo += b
+
+
+def test_stream_live_superset_of_opt_sparse_merge():
+    """Stale merged snapshots (K=4) still give query-safe live masks:
+    completion over the live survivors is exact."""
+    rng = np.random.default_rng(2)
+    # TOP-N: every true top-N value survives the live mask
+    (v,) = _streams("topn_det", rng)
+    _, res = _run_stream("topn_det", (v,), SIZES, merge_every=4)
+    live = np.asarray(res.live_keep)
+    N = PARAMS["topn_det"]["N"]
+    topn = np.sort(v)[-N:]
+    assert np.isin(topn, v[live]).all()
+    # DISTINCT: at least one occurrence of every value survives
+    (vals,) = _streams("distinct", rng)
+    _, res = _run_stream("distinct", (vals,), SIZES, merge_every=4)
+    assert set(vals.tolist()) == set(vals[np.asarray(res.live_keep)].tolist())
+    # SKYLINE: every true skyline point survives
+    (pts,) = _streams("skyline", rng)
+    _, res = _run_stream("skyline", (pts,), SIZES, merge_every=4)
+    sky = np.asarray(skyline_oracle(pts))
+    assert np.asarray(res.live_keep)[sky].all()
+
+
+def test_stream_having_live_is_all_true():
+    """HAVING's running sketch underestimates the final count, so the
+    only superset-safe live mask is all-True; pruning happens at close."""
+    rng = np.random.default_rng(3)
+    streams = _streams("having", rng)
+    stream, res = _run_stream("having", streams, SIZES, merge_every=2)
+    assert np.asarray(res.live_keep).all()
+    assert not np.asarray(res.keep).all()   # close() really prunes
+
+
+def test_stream_groupby_completion_exact():
+    """Emissions + final merged state fold to the exact GROUP BY answer
+    (evictions of partials carried across micro-batches included)."""
+    rng = np.random.default_rng(4)
+    keys, vals = _streams("groupby", rng)
+    _, res = _run_stream("groupby", (keys, vals), SIZES, merge_every=2)
+    got = master_complete_groupby(
+        PruneResult(keep=res.keep, state=res.state, emitted=res.emitted),
+        "count")
+    assert got == groupby_oracle(keys, vals, "count")
+
+
+def _backend_donates() -> bool:
+    x = jax.device_put(jnp.arange(8, dtype=jnp.int32))
+    jax.block_until_ready(jax.jit(lambda a: a + 1, donate_argnums=0)(x))
+    return x.is_deleted()
+
+
+def test_stream_donation_buffer_reuse():
+    """The donated fold re-uses the per-lane state buffers in place:
+    the same device pointers survive every fold."""
+    if not _backend_donates():
+        pytest.skip("backend does not support buffer donation")
+    rng = np.random.default_rng(5)
+    vals = rng.integers(1, 5000, 4096).astype(np.uint32)
+
+    def ptrs(stream):
+        return sorted(
+            sh.data.unsafe_buffer_pointer()
+            for leaf in jax.tree_util.tree_leaves(stream._state)
+            for sh in leaf.addressable_shards)
+
+    s = PruneStream("distinct", shards=SHARDS, merge_every=4, d=256, w=4)
+    s.fold(vals[:1024])
+    before = ptrs(s)
+    for lo in range(1024, 4096, 1024):
+        s.fold(vals[lo:lo + 1024])
+    assert ptrs(s) == before
+    # the non-donated baseline allocates fresh state per fold
+    s2 = PruneStream("distinct", shards=SHARDS, merge_every=4,
+                     donate=False, d=256, w=4)
+    s2.fold(vals[:1024])
+    before2 = ptrs(s2)
+    s2.fold(vals[1024:2048])
+    assert ptrs(s2) != before2
+
+
+def test_stream_window_bounds_in_flight():
+    rng = np.random.default_rng(6)
+    vals = rng.integers(1, 500, 8 * 1024).astype(np.uint32)
+    s = PruneStream("distinct", shards=SHARDS, merge_every=1, window=2,
+                    d=64, w=4)
+    for lo in range(0, vals.shape[0], 1024):
+        s.fold(vals[lo:lo + 1024])
+        assert s.in_flight <= 2
+    res = s.close()
+    assert res.stats["batches"] == 8
+
+
+def test_engine_prune_stream_wrapper():
+    rng = np.random.default_rng(7)
+    (v,) = _streams("topn_det", rng, m=4000)
+    res = engine_prune_stream("topn_det", v, micro_batch=1024,
+                              shards=SHARDS, merge_every=1,
+                              **PARAMS["topn_det"])
+    sizes = [1024, 1024, 1024, 928]
+    one, valid, arrival = _one_shot("topn_det", (v,), sizes)
+    np.testing.assert_array_equal(np.asarray(res.keep)[arrival[valid]],
+                                  np.asarray(one.keep)[valid])
+    assert res.keep.shape == (4000,)
+
+
+def test_stream_retain_false_returns_live():
+    rng = np.random.default_rng(8)
+    vals = rng.integers(1, 400, 2048).astype(np.uint32)
+    s = PruneStream("distinct", shards=SHARDS, merge_every=1,
+                    retain=False, d=64, w=4)
+    s.fold(vals[:1024])
+    s.fold(vals[1024:])
+    res = s.close()
+    np.testing.assert_array_equal(np.asarray(res.keep),
+                                  np.asarray(res.live_keep))
+    # unretained streams keep no chunk references
+    assert all(rec["chunks"] is None for rec in s._batches)
+
+
+def test_stream_distinct_not_chunk_sensitive():
+    """apply_block chunking of the close() refresh is exact."""
+    rng = np.random.default_rng(9)
+    vals = rng.integers(1, 400, 2048).astype(np.uint32)
+    _, r1 = _run_stream("distinct", (vals,), [1024, 1024], merge_every=1)
+    _, r2 = _run_stream("distinct", (vals,), [1024, 1024], merge_every=1,
+                        apply_block=32)
+    np.testing.assert_array_equal(np.asarray(r1.keep), np.asarray(r2.keep))
+
+
+def test_optimal_merge_interval_model():
+    """K* = sqrt(2·merge/(σ·c·b)): dearer merges → rarer; bigger batches
+    → more frequent; clamped to [1, max]."""
+    k_cheap = planner.optimal_merge_interval(4096, 1e3)
+    k_dear = planner.optimal_merge_interval(4096, 1e6)
+    assert 1 <= k_cheap <= k_dear <= planner.MAX_MERGE_INTERVAL
+    assert (planner.optimal_merge_interval(1 << 16, 1e5)
+            <= planner.optimal_merge_interval(1 << 10, 1e5))
+    assert planner.optimal_merge_interval(4096, 0.0) == 1
+    assert planner.optimal_merge_interval(
+        1, 1e12) == planner.MAX_MERGE_INTERVAL
+
+
+def test_stream_auto_merge_interval_resolves():
+    rng = np.random.default_rng(10)
+    s = PruneStream("topn_det", shards=SHARDS, merge_every="auto",
+                    **PARAMS["topn_det"])
+    s.fold(rng.random(1024).astype(np.float32) * 1e3 + 1)
+    assert isinstance(s._merge_k, int) and s._merge_k >= 1
