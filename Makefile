@@ -2,7 +2,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-smoke bench-gate distributed-smoke clean
+.PHONY: verify test bench bench-smoke bench-gate distributed-smoke \
+	tune-smoke clean
 
 verify:
 	scripts/verify.sh
@@ -24,6 +25,10 @@ bench:  # full benchmark sweep; refreshes BENCH_results.json
 bench-smoke:
 	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
 	  $(PYTHON) -m benchmarks.bench_engine --smoke
+
+tune-smoke:  # TPC-H suite with a live plan race, checked vs references
+	XLA_FLAGS="$${XLA_FLAGS} --xla_force_host_platform_device_count=8" \
+	  $(PYTHON) examples/tpch_suite.py --smoke --tune=race
 
 clean:  # compiled artifacts are never tracked (.gitignore + verify guard)
 	find . -name __pycache__ -type d -prune -exec rm -rf {} +

@@ -12,12 +12,12 @@ import traceback
 def main() -> None:
     from . import (bench_completion, bench_distinct, bench_engine,
                    bench_resources, bench_scale, bench_skyline,
-                   bench_stream, bench_topn, roofline)
+                   bench_stream, bench_topn, bench_tpch, roofline)
     from .common import write_results
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_distinct, bench_topn, bench_skyline, bench_engine,
-                bench_stream, bench_scale, bench_completion,
+                bench_stream, bench_tpch, bench_scale, bench_completion,
                 bench_resources, roofline):
         try:
             mod.run()

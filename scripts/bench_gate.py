@@ -61,13 +61,18 @@ FLOORS = {
     # the streaming tentpole mechanism: a donated fold that stops
     # re-using its state buffers collapses to ~1x and must fail
     "stream_fold_donation_x": 1.2,
+    # the tuning contract: the analytic incumbent is raced too, so the
+    # winner can never be slower — < 1.0 means the race protocol broke
+    # (incumbent skipped, or speedup computed from a re-measure instead
+    # of the race's own timings)
+    "tpch_tuned_vs_analytic_x": 1.0,
 }
 
 # percentile-latency suffixes before the plain "_us" they end with, so
 # classify() names the specific unit; "_eps" gates like "_qps"
 SUFFIXES = ("_p50_us", "_p99_us", "_us", "_x", "_qps", "_eps",
             "_ratio", "_count")
-GATED_PREFIXES = ("engine_", "stream_")
+GATED_PREFIXES = ("engine_", "stream_", "tpch_")
 
 # must precede any jax import (bench rows depend on the device count)
 if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -94,12 +99,14 @@ def main() -> int:
         print("bench_gate: no committed BENCH_results.json — gating "
               "only the within-run _x floors")
 
-    from benchmarks import bench_engine, bench_stream, common
+    from benchmarks import bench_engine, bench_stream, bench_tpch, common
 
     print("bench_gate: running bench_engine --smoke ...")
     bench_engine.run(smoke=True)
     print("bench_gate: running bench_stream --smoke ...")
     bench_stream.run(smoke=True)
+    print("bench_gate: running bench_tpch --smoke ...")
+    bench_tpch.run(smoke=True)
     fresh = dict(common.RESULTS)
 
     failures: list[str] = []

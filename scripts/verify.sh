@@ -19,12 +19,27 @@ if [[ -n "${tracked_pyc}" ]]; then
     echo "run: git rm -r --cached **/__pycache__ '*.pyc'" >&2
     exit 1
 fi
+# the tuner's plan cache is a per-machine measurement artifact (defaults
+# to ~/.cache, overridable via REPRO_PLAN_CACHE) and must never be
+# committed — a plan raced on one host is wrong for another
+tracked_plans=$(git ls-files '*plan_cache*.json' 2>/dev/null || true)
+if [[ -n "${tracked_plans}" ]]; then
+    echo "ERROR: plan-cache artifacts are tracked in git:" >&2
+    echo "${tracked_plans}" >&2
+    echo "run: git rm --cached <file>  (and keep REPRO_PLAN_CACHE" >&2
+    echo "pointed outside the repo)" >&2
+    exit 1
+fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
     export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
 fi
 
+# keep CI's tuning traffic out of any real ~/.cache plan cache
+export REPRO_PLAN_CACHE="${REPRO_PLAN_CACHE:-$(mktemp -d)/plan_cache.json}"
+
 python -m pytest -x -q "$@"
 python -m benchmarks.bench_engine --smoke
+python examples/tpch_suite.py --smoke --tune=race
 echo "verify: OK"

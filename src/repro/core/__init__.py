@@ -24,7 +24,8 @@ from .engine import (ALGORITHMS, MODES, MODES_BATCH, PASS2,
                      BatchPruneResult, DistinctMerged,
                      TopNDetMerged, apply_merged, calibrate_merge_cost,
                      default_mesh, engine_prune, engine_prune_batch,
-                     merge_states, shard_stack, unshard_mask,
+                     execute_plan, execute_plan_batch, merge_states,
+                     reset_caches, shard_stack, unshard_mask,
                      unshard_mask_batch)
 from .streaming import (PruneStream, StreamResult, engine_prune_stream,
                         lane_view)
@@ -34,7 +35,10 @@ from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       optimal_pass2, pass2_time, MEASURED_MERGE_COSTS,
                       QueryBatchPlan, plan_query_batch,
                       RESIDENT_OVERHEAD_ENTRIES, optimal_merge_interval,
-                      DEFAULT_STALENESS_RATE)
+                      DEFAULT_STALENESS_RATE, Plan, TuneResult,
+                      TUNE_MODES, analytic_plan, candidate_plans, tune,
+                      resolve_plan)
+from .plancache import PlanCache, cache_key
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)
 

@@ -801,7 +801,8 @@ def _resolve_shards(algo: str, streams, params, mode: str, shards,
 def engine_prune(algo: str, *streams, mode: str = "scan",
                  shards: int | str | None = None, mesh=None,
                  mesh_axis: str = "shards", apply_block: int | None = None,
-                 pass2: str = "master", **params) -> PruneResult:
+                 pass2: str = "master", tune: str = "off",
+                 plan_cache=None, **params) -> PruneResult:
     """Run pruner `algo` over its stream(s) in the requested mode.
 
     streams: the algorithm's data arrays, all sharing leading dim m
@@ -825,6 +826,17 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     mesh mode, where large S is the point and the [S·n, S·w] compare
     would otherwise bound it.
 
+    tune: ``"off"`` (default) runs exactly the mode/shards/pass2/
+    apply_block given here. ``"cached"`` replays a previously raced
+    plan from the persisted plan cache (miss -> the analytic plan);
+    ``"race"`` additionally races the planner's mask-preserving
+    candidate grid on a stream prefix on a miss and persists the
+    winner. Both override mode/shards/pass2/apply_block entirely and
+    need concrete (non-traced) streams; the keep mask is always
+    returned flat over m and is bit-identical to the analytic plan's
+    mask — tuning changes speed, never results. ``plan_cache``: a
+    ``plancache.PlanCache`` (default: the ``REPRO_PLAN_CACHE`` file).
+
     pass2: where mode="mesh" applies the merged state — ``"master"``
     (gather everything, filter the full stream there), ``"mesh"``
     (broadcast the merged state, filter each device's resident shard;
@@ -838,6 +850,18 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     merged global state (`two_pass`/`mesh`), or the final scan state
     (`scan`).
     """
+    if tune != "off":
+        if tune not in planner.TUNE_MODES:
+            raise ValueError(f"tune must be one of {planner.TUNE_MODES}, "
+                             f"got {tune!r}")
+        live = tuple(s for s in streams if s is not None)
+        if any(isinstance(s, jax.core.Tracer) for s in live):
+            raise ValueError(
+                "tune= needs concrete streams (the race times real "
+                "executions) — call outside jit, or pass tune='off'")
+        resolved = planner.resolve_plan(algo, live, params,
+                                        tune_mode=tune, cache=plan_cache)
+        return execute_plan(algo, *live, plan=resolved.plan, **params)
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if pass2 not in PASS2:
@@ -913,6 +937,71 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
         keep2 = spec.apply(merged, shard_streams, r1.keep, params)
     return PruneResult(keep=_unshard(keep2, m), state=merged,
                        emitted=emitted)
+
+
+def execute_plan(algo: str, *streams, plan, **params) -> PruneResult:
+    """Run one tuned/analytic ``planner.Plan`` through the engine.
+
+    The uniform execution contract behind `tune=`: every plan in the
+    tuner's universe maps onto the two-pass family at the plan's fixed
+    lane count, so the returned keep mask is bit-identical across all
+    plans for the same stream — and it is ALWAYS returned flat over the
+    original m entries (resident pass-2 masks are unstacked here), so
+    callers never see plan-dependent layouts.
+    """
+    streams = tuple(s for s in streams if s is not None)
+    m = int(streams[0].shape[0])
+    if plan.mode == "mesh":
+        mesh = default_mesh("shards", num_devices=plan.num_devices)
+        res = engine_prune(algo, *streams, mode="mesh",
+                           shards=plan.shards, mesh=mesh,
+                           apply_block=plan.apply_block,
+                           pass2=plan.pass2, **params)
+        keep = res.keep
+        if keep.ndim == 2:  # resident pass 2: stacked [S, n]
+            keep = unshard_mask(keep, m)
+        # masks from different device spreads must compose: commit the
+        # flat mask to the default device instead of leaving it sharded
+        # over whatever mesh this plan happened to run on
+        return dataclasses.replace(
+            res, keep=jax.device_put(keep, jax.devices()[0]))
+    return engine_prune(algo, *streams, mode="two_pass",
+                        shards=plan.shards,
+                        apply_block=plan.apply_block, **params)
+
+
+def execute_plan_batch(algo: str, queries, *streams, plan,
+                       device_budget_bytes: int | None = None
+                       ) -> BatchPruneResult:
+    """Batched counterpart of ``execute_plan``: one tuned plan for Q
+    same-family queries over shared streams. The keep mask comes back
+    flat bool[Q, m] regardless of where pass 2 ran."""
+    streams = tuple(s for s in streams if s is not None)
+    m = int(streams[0].shape[0])
+    kwargs = dict(shards=plan.shards, apply_block=plan.apply_block,
+                  device_budget_bytes=device_budget_bytes)
+    if plan.mode == "mesh":
+        mesh = default_mesh("shards", num_devices=plan.num_devices)
+        res = engine_prune_batch(algo, queries, *streams, mode="mesh",
+                                 mesh=mesh, pass2=plan.pass2, **kwargs)
+    else:
+        res = engine_prune_batch(algo, queries, *streams,
+                                 mode="two_pass", **kwargs)
+    if res.keep.ndim == 3:  # resident pass 2: stacked [Q, S, n]
+        res = dataclasses.replace(res,
+                                  keep=unshard_mask_batch(res.keep, m))
+    return res
+
+
+def reset_caches() -> None:
+    """Forget every measured constant this process has accumulated:
+    the merge-cost calibration table and the planner's mirror of it.
+    Tests reset these between cases (autouse fixture in conftest) so no
+    test's plan depends on which test calibrated first. The *persisted*
+    plan cache is per-file — point ``REPRO_PLAN_CACHE`` at a temp dir
+    or call ``plancache.PlanCache().clear()``."""
+    _CALIBRATION.clear()
+    planner.MEASURED_MERGE_COSTS.clear()
 
 
 # ------------------------------------------------- multi-query batching

@@ -1,0 +1,185 @@
+"""Persisted plan cache for the self-tuning planner (``planner.tune``).
+
+Winners of a tuning race are stored in one small JSON file keyed by
+
+    (algo, query shape, m-bucket, distribution fingerprint,
+     device topology)
+
+so the next run of the *same workload shape* skips the race entirely and
+replays the recorded plan. The key deliberately buckets m by power of
+two and fingerprints the value distribution from a sampled prefix: a
+plan raced at m=2^20 on zipf-skewed uint32 keys should not be replayed
+for a uniform float stream a thousand times shorter.
+
+Durability rules (tested in tests/test_plancache.py):
+
+* schema versioning — the file carries ``{"schema": N, "plans": ...}``;
+  a version mismatch (or any unparsable/foreign content) degrades to an
+  empty cache with a warning, never a crash. Callers fall back to the
+  analytic plan.
+* atomic writes — every ``put`` rewrites the file via a same-directory
+  temp file + ``os.replace``, so a reader never observes a torn write
+  and concurrent writers lose at worst their own last update (each
+  ``put`` is load-modify-write over the whole file).
+* bounded size — at most ``MAX_ENTRIES`` plans are kept; the oldest
+  (by ``saved_at``) are evicted first.
+
+The default location is ``~/.cache/cheetah/plan_cache.json``, override
+with the ``REPRO_PLAN_CACHE`` environment variable (the test suite
+points it at a per-test tmp dir; scripts/verify.sh guards that no plan
+cache file ever becomes a tracked repo artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+import warnings
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+ENV_VAR = "REPRO_PLAN_CACHE"
+MAX_ENTRIES = 256
+
+# entries of each stream consulted by the distribution fingerprint
+FINGERPRINT_SAMPLE = 2048
+
+
+def default_path() -> pathlib.Path:
+    """Resolve the cache file path (env override wins; read per call so
+    tests can redirect it without reimporting)."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return pathlib.Path(env).expanduser()
+    return pathlib.Path("~/.cache/cheetah/plan_cache.json").expanduser()
+
+
+def m_bucket(m: int) -> int:
+    """floor(log2(m)): plans transfer within a power-of-two of stream
+    length but not across orders of magnitude (S* scales with sqrt(m))."""
+    return max(int(m).bit_length() - 1, 0)
+
+
+def distribution_fingerprint(streams, sample: int = FINGERPRINT_SAMPLE
+                             ) -> str:
+    """Coarse, deterministic signature of the sampled stream prefix.
+
+    Per stream: dtype kind+width, a quantized distinct-value ratio
+    (drives DISTINCT/GROUP BY cache hit rates) and a log2 magnitude
+    bucket (drives TOP-N ladder behavior). Host-side numpy on at most
+    ``sample`` leading entries — cheap, and identical across runs for
+    the deterministic suite generators.
+    """
+    parts = []
+    for s in streams:
+        n = min(sample, int(s.shape[0]))
+        a = np.asarray(s[:n])
+        col = a.reshape(n, -1)[:, 0]
+        if a.dtype.kind == "b":
+            uniq = 1.0
+            mag = 0
+        else:
+            uniq = len(np.unique(col)) / max(n, 1)
+            mean = float(np.mean(np.abs(col.astype(np.float64))))
+            mag = int(np.log2(mean + 1.0))
+        parts.append(f"{a.dtype.kind}{a.dtype.itemsize}"
+                     f"u{int(round(uniq * 10))}g{mag}")
+    return "-".join(parts)
+
+
+def device_fingerprint() -> str:
+    """Backend + device count: a plan raced on the 8-device CPU platform
+    must not be replayed on a 1-device host (mesh spreads differ)."""
+    import jax
+
+    return f"{jax.default_backend()}x{len(jax.devices())}"
+
+
+def cache_key(algo: str, streams, params: dict) -> str:
+    """The full plan-cache key for one engine invocation."""
+    streams = tuple(s for s in streams if s is not None)
+    m = int(streams[0].shape[0])
+    shape_sig = ",".join(
+        str(s.dtype) + "".join(f"x{d}" for d in s.shape[1:])
+        for s in streams)
+    param_sig = ",".join(
+        f"{k}={v}" for k, v in sorted(params.items())
+        if isinstance(v, (int, float, str, bool)))
+    return "|".join([algo, shape_sig, f"m{m_bucket(m)}", param_sig,
+                     distribution_fingerprint(streams),
+                     device_fingerprint()])
+
+
+class PlanCache:
+    """Load/store tuned plans in one schema-versioned JSON file."""
+
+    def __init__(self, path: os.PathLike | str | None = None):
+        self.path = pathlib.Path(path) if path is not None \
+            else default_path()
+
+    # ------------------------------------------------------------- read
+    def load(self) -> dict:
+        """key -> entry dict. Missing file = empty; corrupt content or a
+        schema mismatch = empty *with a warning* (analytic fallback)."""
+        try:
+            raw = json.loads(self.path.read_text())
+        except FileNotFoundError:
+            return {}
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"plan cache {self.path} is unreadable ({e!r}); "
+                f"falling back to analytic plans", stacklevel=2)
+            return {}
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA_VERSION:
+            got = raw.get("schema") if isinstance(raw, dict) else None
+            warnings.warn(
+                f"plan cache {self.path} has schema {got!r} (expected "
+                f"{SCHEMA_VERSION}); ignoring it and falling back to "
+                f"analytic plans", stacklevel=2)
+            return {}
+        plans = raw.get("plans")
+        return plans if isinstance(plans, dict) else {}
+
+    def get(self, key: str) -> dict | None:
+        """The cached entry for `key`, or None. Entries are dicts with a
+        ``"plan"`` sub-dict (see ``planner.Plan.from_dict``); malformed
+        entries read as misses."""
+        entry = self.load().get(key)
+        if isinstance(entry, dict) and isinstance(entry.get("plan"), dict):
+            return entry
+        return None
+
+    # ------------------------------------------------------------ write
+    def put(self, key: str, plan: dict, **meta) -> None:
+        """Persist one raced winner (load-modify-write, atomic rename)."""
+        plans = self.load()
+        plans[key] = {"plan": dict(plan), "saved_at": time.time(), **meta}
+        if len(plans) > MAX_ENTRIES:
+            # evict oldest first; unstamped entries count as oldest
+            by_age = sorted(plans.items(),
+                            key=lambda kv: kv[1].get("saved_at", 0.0)
+                            if isinstance(kv[1], dict) else 0.0)
+            plans = dict(by_age[len(plans) - MAX_ENTRIES:])
+        payload = {"schema": SCHEMA_VERSION, "plans": plans}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name + ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def clear(self) -> None:
+        try:
+            self.path.unlink()
+        except FileNotFoundError:
+            pass

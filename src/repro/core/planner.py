@@ -389,6 +389,353 @@ def optimal_merge_interval(batch_entries: int, merge_cost_entries: float,
     return max(1, min(int(round(k)), max_interval))
 
 
+# ------------------------------------------------ self-tuning plan search
+# `tune` races a small candidate set of *mask-preserving* engine plans
+# on a sampled prefix of the entry stream and persists the winner in the
+# plan cache (core.plancache). The candidate universe is built around
+# the one correctness invariant the engine tests pin down: at a FIXED
+# lane count S, `two_pass`, `mesh` (either pass-2 placement, any device
+# spread that divides S) and any `apply_block` chunking all produce
+# BIT-IDENTICAL keep masks. S itself is semantic — changing it changes
+# the per-shard states and therefore the mask — so the tuner takes S
+# from the analytic model (optimal_shards over the measured merge cost,
+# i.e. the incumbent is already workload-calibrated) and races only the
+# execution choices the analytic formulas have never validated: mode,
+# pass-2 placement, chunk size, and how many devices the lanes spread
+# over. Plans change speed, never results.
+
+TUNE_MODES = ("off", "cached", "race")
+DEFAULT_PROBE_ENTRIES = 1 << 14
+DEFAULT_EXIT_FACTOR = 1.5
+DEFAULT_TIME_BUDGET_S = 2.0
+# candidate apply_block values raced for the chunkable algorithms
+CANDIDATE_BLOCKS = (1024, 4096)
+# hard cap on the raced grid (incumbent included)
+MAX_CANDIDATES = 12
+
+# test seam: when set, used in place of wall-clock timing by every race
+# that did not pass an explicit `measure` (lets CI inject recorded
+# timings so race winners are deterministic — no flaky wall clocks)
+MEASURE_HOOK = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One executable engine configuration in the tuner's universe.
+
+    All tuner plans run the two-pass family at the same lane count
+    ``shards`` (>= 2 — S=1 would degrade two_pass to the scan body,
+    which is a *different mask family*), so any plan the tuner can
+    select produces the same keep mask as the analytic incumbent.
+    ``num_devices`` only matters for ``mode="mesh"`` and must divide
+    ``shards`` (the engine's lane-spread rule).
+    """
+
+    mode: str = "two_pass"        # "two_pass" | "mesh"
+    shards: int = 8
+    pass2: str = "master"         # mesh only: "master" | "mesh"
+    apply_block: int | None = None
+    num_devices: int = 1          # mesh only: lane spread
+
+    def key(self) -> str:
+        return (f"{self.mode}/s{self.shards}/p2-{self.pass2}"
+                f"/b{self.apply_block or 0}/d{self.num_devices}")
+
+    def to_dict(self) -> dict:
+        return dict(mode=self.mode, shards=self.shards, pass2=self.pass2,
+                    apply_block=self.apply_block,
+                    num_devices=self.num_devices)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        """Validating deserializer: any malformed field raises ValueError
+        so cache consumers can fall back to the analytic plan."""
+        try:
+            plan = cls(mode=d["mode"], shards=int(d["shards"]),
+                       pass2=d.get("pass2", "master"),
+                       apply_block=(None if d.get("apply_block") in
+                                    (None, 0) else int(d["apply_block"])),
+                       num_devices=int(d.get("num_devices", 1)))
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"malformed plan dict {d!r}: {e}") from e
+        if plan.mode not in ("two_pass", "mesh"):
+            raise ValueError(f"plan mode {plan.mode!r} outside the "
+                             f"mask-preserving universe")
+        if plan.pass2 not in ("master", "mesh"):
+            raise ValueError(f"plan pass2 {plan.pass2!r} invalid")
+        if plan.shards < 2:
+            raise ValueError("tuned plans need shards >= 2 (S=1 changes "
+                             "the mask family)")
+        if plan.apply_block is not None and plan.apply_block < 1:
+            raise ValueError("apply_block must be positive or None")
+        if plan.num_devices < 1 or plan.shards % plan.num_devices:
+            raise ValueError(f"num_devices={plan.num_devices} must "
+                             f"divide shards={plan.shards}")
+        return plan
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """What `tune`/`resolve_plan` decided and how.
+
+    source: "cache" (hit — race short-circuited), "race" (raced now,
+    winner persisted when a cache is in play), or "analytic" (no race:
+    tune="cached" miss, stream too short, or zero budget left the
+    incumbent unchallenged... the incumbent itself is always analytic).
+    timings: plan.key() -> probe microseconds for every candidate
+    actually measured (incumbent first).
+    """
+
+    plan: Plan
+    source: str
+    key: str | None = None
+    timings: dict = dataclasses.field(default_factory=dict)
+    incumbent_us: float | None = None
+    best_us: float | None = None
+    race_wall_s: float = 0.0
+
+    @property
+    def speedup_x(self) -> float:
+        """Raced winner vs analytic incumbent, from the race's own
+        timings (>= 1.0 by construction: the incumbent is in the race)."""
+        if not self.incumbent_us or not self.best_us:
+            return 1.0
+        return self.incumbent_us / self.best_us
+
+
+def _largest_divisor(s: int, limit: int) -> int:
+    return max(k for k in range(1, max(min(s, limit), 1) + 1)
+               if s % k == 0)
+
+
+def analytic_plan(algo: str, streams, params: dict | None = None, *,
+                  shards: int | None = None,
+                  max_devices: int | None = None) -> Plan:
+    """The incumbent: what the analytic formulas pick today.
+
+    S from ``optimal_shards`` over the measured merge cost
+    (``calibrate_merge_cost`` — the incumbent is already calibrated,
+    the race challenges everything the formulas *don't* measure),
+    clamped to [2, m]; mesh when more than one device can host the
+    lanes, with ``optimal_pass2`` choosing the pass-2 placement and the
+    chunkable algorithms getting the engine's default apply block.
+    """
+    from . import engine as _engine  # lazy: engine imports planner
+
+    params = dict(params or {})
+    streams = tuple(s for s in streams if s is not None)
+    m = int(streams[0].shape[0])
+    c, state_bytes = _engine.calibrate_merge_cost(algo, streams, params)
+    s = shards if shards is not None else optimal_shards(
+        m, state_bytes, merge_byte_cost=c)
+    s = max(2, min(int(s), m))
+    if max_devices is None:
+        import jax
+
+        max_devices = len(jax.devices())
+    ndev = _largest_divisor(s, max_devices)
+    spec = _engine._SPECS[algo]
+    mode = "mesh" if ndev > 1 else "two_pass"
+    pass2 = "master"
+    if mode == "mesh":
+        pass2 = optimal_pass2(m, ndev, s * state_bytes)
+    block = None
+    if spec.chunkable and -(-m // s) > _engine.DEFAULT_MESH_APPLY_BLOCK:
+        block = _engine.DEFAULT_MESH_APPLY_BLOCK
+    return Plan(mode=mode, shards=s, pass2=pass2, apply_block=block,
+                num_devices=ndev if mode == "mesh" else 1)
+
+
+def candidate_plans(algo: str, streams, params: dict | None = None, *,
+                    incumbent: Plan | None = None,
+                    max_devices: int | None = None,
+                    max_candidates: int = MAX_CANDIDATES) -> list:
+    """The raced grid: incumbent first, then mask-preserving variants.
+
+    mode x pass2 x chunk x device-spread at the incumbent's S — every
+    plan here yields the incumbent's exact keep mask (property-tested in
+    tests/test_tune.py for all six algorithms).
+    """
+    from . import engine as _engine
+
+    params = dict(params or {})
+    streams = tuple(s for s in streams if s is not None)
+    if incumbent is None:
+        incumbent = analytic_plan(algo, streams, params,
+                                  max_devices=max_devices)
+    if max_devices is None:
+        import jax
+
+        max_devices = len(jax.devices())
+    s = incumbent.shards
+    n_per = -(-int(streams[0].shape[0]) // s)
+    chunkable = _engine._SPECS[algo].chunkable
+    blocks = [None] + [b for b in CANDIDATE_BLOCKS
+                       if chunkable and b < n_per]
+    devs = sorted({d for d in range(2, max_devices + 1) if s % d == 0},
+                  reverse=True)[:2]  # widest spreads first
+    plans = [incumbent]
+    for block in blocks:
+        plans.append(Plan(mode="two_pass", shards=s, apply_block=block))
+        for d in devs:
+            for p2 in ("mesh", "master"):
+                plans.append(Plan(mode="mesh", shards=s, pass2=p2,
+                                  apply_block=block, num_devices=d))
+    out, seen = [], set()
+    for p in plans:
+        if p.key() not in seen:
+            seen.add(p.key())
+            out.append(p)
+    return out[:max_candidates]
+
+
+def _time_plan_us(thunk) -> float:
+    """Default race measurement: one warmup (compile), best of 2 runs."""
+    import time as _time
+
+    thunk()
+    best = float("inf")
+    for _ in range(2):
+        t0 = _time.perf_counter()
+        thunk()
+        best = min(best, (_time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def tune(algo: str, streams, params: dict | None = None, *,
+         probe_entries: int = DEFAULT_PROBE_ENTRIES,
+         exit_factor: float = DEFAULT_EXIT_FACTOR,
+         time_budget_s: float = DEFAULT_TIME_BUDGET_S,
+         cache=None, use_cache: bool = True,
+         measure=None, max_devices: int | None = None) -> TuneResult:
+    """Race candidate plans on a sampled stream prefix; keep the winner.
+
+    Protocol (the querytorque swarm shape — candidates raced per query
+    with a speedup exit gate): the analytic incumbent runs first, then
+    each candidate in grid order; racing stops early once a candidate
+    beats the incumbent by >= ``exit_factor`` (good enough — ship it) or
+    the ``time_budget_s`` wall budget is spent (the incumbent's own
+    probe run is always measured, so `speedup_x` is well defined and
+    >= 1.0 by construction). The winner is persisted to the plan cache
+    keyed by (algo, query shape, m-bucket, distribution fingerprint,
+    device topology); a later call with the same key short-circuits the
+    race entirely.
+
+    ``measure(plan, thunk) -> us`` overrides wall-clock timing (CI
+    injects recorded timings for deterministic winners); ``cache=None``
+    uses the default cache file, ``use_cache=False`` disables both
+    lookup and persistence.
+    """
+    import time as _time
+
+    import jax
+
+    from . import engine as _engine
+    from . import plancache as _pc
+
+    params = dict(params or {})
+    streams = tuple(s for s in streams if s is not None)
+    if any(isinstance(s, jax.core.Tracer) for s in streams):
+        raise ValueError(
+            "planner.tune races wall-clock time and needs concrete "
+            "streams — call it outside jit")
+    key = None
+    if use_cache:
+        cache = cache if cache is not None else _pc.PlanCache()
+        key = _pc.cache_key(algo, streams, params)
+        entry = cache.get(key)
+        if entry is not None:
+            try:
+                plan = Plan.from_dict(entry["plan"])
+                if plan.shards > int(streams[0].shape[0]):
+                    raise ValueError(
+                        f"cached shards={plan.shards} exceed stream "
+                        f"length {int(streams[0].shape[0])}")
+                return TuneResult(plan=plan, source="cache", key=key)
+            except ValueError as e:
+                import warnings
+
+                warnings.warn(f"ignoring unusable cached plan for "
+                              f"{key!r}: {e}", stacklevel=2)
+
+    m = int(streams[0].shape[0])
+    incumbent = analytic_plan(algo, streams, params,
+                              max_devices=max_devices)
+    if m < 4:
+        return TuneResult(plan=incumbent, source="analytic", key=key)
+    plans = candidate_plans(algo, streams, params, incumbent=incumbent,
+                            max_devices=max_devices)
+    probe_m = max(min(m, probe_entries), incumbent.shards)
+    probe = tuple(s[:probe_m] for s in streams)
+    if measure is None:
+        measure = MEASURE_HOOK
+    timings: dict = {}
+    t0 = _time.perf_counter()
+    best_plan, best_us, incumbent_us = incumbent, None, None
+    for i, plan in enumerate(plans):
+        def thunk(plan=plan):
+            jax.block_until_ready(_engine.execute_plan(
+                algo, *probe, plan=plan, **params).keep)
+
+        us = (float(measure(plan, thunk)) if measure is not None
+              else _time_plan_us(thunk))
+        timings[plan.key()] = us
+        if i == 0:
+            incumbent_us = best_us = us
+        elif us < best_us:
+            best_us, best_plan = us, plan
+        if i > 0 and us * exit_factor <= incumbent_us:
+            break  # exit gate: beat the incumbent by >= the factor
+        if _time.perf_counter() - t0 >= time_budget_s:
+            break
+    wall = _time.perf_counter() - t0
+    result = TuneResult(plan=best_plan, source="race", key=key,
+                        timings=timings, incumbent_us=incumbent_us,
+                        best_us=best_us, race_wall_s=wall)
+    if use_cache and cache is not None and key is not None:
+        cache.put(key, best_plan.to_dict(), algo=algo, m=m,
+                  probe_entries=probe_m,
+                  incumbent=incumbent.key(), raced=len(timings),
+                  speedup_x=round(result.speedup_x, 3))
+    return result
+
+
+def resolve_plan(algo: str, streams, params: dict | None = None,
+                 tune_mode: str = "race", cache=None,
+                 **tune_kwargs) -> TuneResult:
+    """The engine's tune= knob, as a planner entry point.
+
+    ``"cached"``: cache hit -> cached plan; miss -> analytic incumbent
+    (never races, never writes). ``"race"``: cache hit -> cached plan;
+    miss -> race now and persist the winner. ``"off"`` is rejected here
+    (the engine handles it by not calling us).
+    """
+    if tune_mode not in ("cached", "race"):
+        raise ValueError(
+            f"tune must be one of {TUNE_MODES}, got {tune_mode!r}")
+    from . import plancache as _pc
+
+    params = dict(params or {})
+    streams = tuple(s for s in streams if s is not None)
+    if tune_mode == "cached":
+        cache = cache if cache is not None else _pc.PlanCache()
+        key = _pc.cache_key(algo, streams, params)
+        entry = cache.get(key)
+        if entry is not None:
+            try:
+                plan = Plan.from_dict(entry["plan"])
+                if plan.shards <= int(streams[0].shape[0]):
+                    return TuneResult(plan=plan, source="cache", key=key)
+            except ValueError as e:
+                import warnings
+
+                warnings.warn(f"ignoring unusable cached plan for "
+                              f"{key!r}: {e}", stacklevel=2)
+        return TuneResult(plan=analytic_plan(algo, streams, params),
+                          source="analytic", key=key)
+    return tune(algo, streams, params, cache=cache, **tune_kwargs)
+
+
 def rule_count(algo: str, **p) -> int:
     """Control-plane rules per query: 10-20 (paper §7.1)."""
     base = {"distinct_lru": 12, "distinct_fifo": 12, "topn_det": 14,

@@ -8,6 +8,8 @@ protocol and its superset-safety property.
 """
 from .tables import Table, make_products_ratings, make_uservisits, make_rankings
 from .engine import run_query, run_queries, QuerySpec
+from .workloads import (SUITE, SuiteQuery, engine_streams, make_lineitem,
+                        make_orders, tpch_tables)
 from .protocol import (SwitchReliability, MultiQuerySwitchReliability,
                        combined_forward_mask, simulate_lossy_stream,
                        simulate_lossy_stream_multi)

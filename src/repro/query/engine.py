@@ -53,15 +53,35 @@ def _num_workers(mesh, axis="data") -> int:
     return mesh.shape[axis]
 
 
+def _check_tune(tune: str, mesh) -> None:
+    if tune not in core.TUNE_MODES:
+        raise ValueError(
+            f"tune must be one of {core.TUNE_MODES}, got {tune!r}")
+    if tune != "off" and mesh is not None:
+        raise ValueError(
+            "tune= picks its own lane count and device spread; it can't "
+            "be combined with an explicit worker mesh (the mesh IS the "
+            "deployment) — pass mesh=None or tune='off'")
+
+
 def _engine_call(algo: str, streams: tuple, mesh, axis: str,
-                 params: dict) -> core.PruneResult:
+                 params: dict, tune: str = "off",
+                 plan_cache=None) -> core.PruneResult:
     """One engine invocation per query: mesh-backed when a mesh exists
     (S = one lane per worker on the data axis, pass 2 resident on the
     workers), sequential otherwise. The result's keep mask is
     normalized to the flat bool[m] layout — only the mask is gathered
     (``unshard_mask``); the entry stream stays sharded on the workers
     and master completion reads the columns this layer already holds.
+
+    tune != "off" (meshless only) replaces the scan fallback with a
+    cached/raced two-pass-family plan (see ``core.planner.tune``); the
+    mask stays flat and bit-identical to the analytic plan's.
     """
+    if tune != "off":
+        tr = core.resolve_plan(algo, streams, params, tune_mode=tune,
+                               cache=plan_cache)
+        return core.execute_plan(algo, *streams, plan=tr.plan, **params)
     if mesh is None:
         return core.engine_prune(algo, *streams, mode="scan", **params)
     r = core.engine_prune(algo, *streams, mode="mesh",
@@ -155,8 +175,16 @@ def _prepare(spec: QuerySpec, table: Table):
     raise KeyError(k)
 
 
-def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
-    """Execute a query with switch pruning; returns output + statistics."""
+def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data",
+              tune: str = "off", plan_cache=None) -> dict:
+    """Execute a query with switch pruning; returns output + statistics.
+
+    tune: "off" | "cached" | "race" — self-tuned engine plans for the
+    single-table pruners (join/filter have bespoke execution paths and
+    ignore it). Incompatible with an explicit mesh; results are
+    bit-identical across all three settings.
+    """
+    _check_tune(tune, mesh)
     k = spec.kind
     p = dict(spec.params)
     if k == "join":
@@ -169,7 +197,8 @@ def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data") -> dict:
         final = core.master_complete_filter(formula, cols, pr.keep)
         return _result(np.nonzero(np.asarray(final))[0], pr.keep)
     algo, streams, params, complete = _prepare(spec, tables)
-    return complete(_engine_call(algo, streams, mesh, axis, params))
+    return complete(_engine_call(algo, streams, mesh, axis, params,
+                                 tune, plan_cache))
 
 
 def _group_key(spec: QuerySpec):
@@ -197,7 +226,8 @@ def _group_key(spec: QuerySpec):
 
 
 def run_queries(specs, tables, mesh=None, axis: str = "data",
-                device_budget_bytes: int | None = None) -> list:
+                device_budget_bytes: int | None = None,
+                tune: str = "off", plan_cache=None) -> list:
     """Execute many queries, batching compatible ones into one program.
 
     Specs are grouped by `_group_key` (same algorithm family, columns
@@ -213,7 +243,15 @@ def run_queries(specs, tables, mesh=None, axis: str = "data",
     (the paper's §8 switch-memory constraint); oversubscribed groups
     are split into sequential admission waves by
     ``planner.plan_query_batch``.
+
+    tune: "off" | "cached" | "race" (meshless only). Each multi-spec
+    group resolves ONE plan — tuned on the group's shared streams with
+    the first query's params — and runs the whole batch through it;
+    singletons tune per query. Exact results either way (superset
+    safety), though a group's masks may differ from a per-query tuned
+    serial loop since the group shares one lane count.
     """
+    _check_tune(tune, mesh)
     specs = list(specs)
     results: list = [None] * len(specs)
     groups: dict = {}
@@ -226,13 +264,21 @@ def run_queries(specs, tables, mesh=None, axis: str = "data",
     for idxs in groups.values():
         if len(idxs) == 1:
             i = idxs[0]
-            results[i] = run_query(specs[i], tables, mesh, axis)
+            results[i] = run_query(specs[i], tables, mesh, axis,
+                                   tune, plan_cache)
             continue
         prepped = [_prepare(specs[i], tables) for i in idxs]
         algo, streams = prepped[0][0], prepped[0][1]
         queries = [pr[2] for pr in prepped]
         m = streams[0].shape[0]
-        if mesh is None:
+        if tune != "off":
+            tr = core.resolve_plan(algo, streams, queries[0],
+                                   tune_mode=tune, cache=plan_cache)
+            rb = core.execute_plan_batch(
+                algo, queries, *streams, plan=tr.plan,
+                device_budget_bytes=device_budget_bytes)
+            keep = rb.keep
+        elif mesh is None:
             rb = core.engine_prune_batch(
                 algo, queries, *streams, mode="scan",
                 device_budget_bytes=device_budget_bytes)

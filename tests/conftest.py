@@ -18,3 +18,24 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_measured_caches(tmp_path, monkeypatch):
+    """No test's plan depends on which test ran first.
+
+    `calibrate_merge_cost` caches measured constants process-wide
+    (`engine._CALIBRATION` + `planner.MEASURED_MERGE_COSTS`), and the
+    tuner persists plans to the `REPRO_PLAN_CACHE` file — both would
+    leak across test modules (a plan "raced" in one test silently
+    replayed in another, order-dependent `shards="auto"` sizes). Reset
+    the in-process caches before each test and point the plan cache at
+    a per-test temp file so nothing ever touches ~/.cache from tests.
+    """
+    monkeypatch.setenv("REPRO_PLAN_CACHE",
+                       str(tmp_path / "plan_cache.json"))
+    from repro.core import engine
+
+    engine.reset_caches()
+    yield
+    engine.reset_caches()

@@ -1,0 +1,176 @@
+"""Plan-cache lifecycle: durability is the product.
+
+A plan cache that crashes on a corrupt file, tears under concurrent
+writers, or replays plans across schema versions is worse than no
+cache — every failure mode here must degrade to "race again / analytic
+plan" with at most a warning.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import plancache, planner
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return plancache.PlanCache(tmp_path / "plans.json")
+
+
+PLAN = planner.Plan(mode="two_pass", shards=8).to_dict()
+
+
+# --------------------------------------------------------- round trip
+def test_round_trip(cache):
+    cache.put("k1", PLAN, algo="topn_det", speedup_x=2.0)
+    entry = cache.get("k1")
+    assert entry["plan"] == PLAN
+    assert entry["algo"] == "topn_det"
+    assert entry["saved_at"] > 0
+    # survives a fresh instance (really hit the disk)
+    again = plancache.PlanCache(cache.path)
+    assert again.get("k1")["plan"] == PLAN
+
+
+def test_missing_file_is_empty_without_warning(cache, recwarn):
+    assert cache.load() == {}
+    assert cache.get("nope") is None
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, UserWarning)]
+
+
+def test_env_var_controls_default_path(tmp_path, monkeypatch):
+    monkeypatch.setenv(plancache.ENV_VAR, str(tmp_path / "pc.json"))
+    c = plancache.PlanCache()
+    c.put("k", PLAN)
+    assert (tmp_path / "pc.json").exists()
+
+
+# ----------------------------------------------------------- fallback
+def test_corrupt_file_warns_and_degrades(cache):
+    cache.path.write_text("{not json at all")
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert cache.load() == {}
+    # and a put straight over the corpse works
+    with pytest.warns(UserWarning, match="unreadable"):
+        cache.put("k", PLAN)
+    assert cache.get("k")["plan"] == PLAN
+
+
+def test_wrong_schema_version_warns_and_degrades(cache):
+    cache.path.write_text(json.dumps(
+        {"schema": plancache.SCHEMA_VERSION + 1,
+         "plans": {"k": {"plan": PLAN}}}))
+    with pytest.warns(UserWarning, match="schema"):
+        assert cache.get("k") is None
+
+
+def test_foreign_json_warns_and_degrades(cache):
+    cache.path.write_text(json.dumps([1, 2, 3]))
+    with pytest.warns(UserWarning, match="schema"):
+        assert cache.load() == {}
+
+
+def test_malformed_entry_reads_as_miss(cache):
+    cache.put("good", PLAN)
+    raw = json.loads(cache.path.read_text())
+    raw["plans"]["bad"] = {"plan": "not-a-dict"}
+    raw["plans"]["worse"] = 42
+    cache.path.write_text(json.dumps(raw))
+    assert cache.get("bad") is None
+    assert cache.get("worse") is None
+    assert cache.get("good")["plan"] == PLAN
+
+
+# ------------------------------------------------------------ atomicity
+def test_put_leaves_no_temp_files_and_valid_json(cache):
+    for i in range(5):
+        cache.put(f"k{i}", PLAN)
+    leftovers = [p for p in cache.path.parent.iterdir()
+                 if p.name != cache.path.name]
+    assert leftovers == []
+    raw = json.loads(cache.path.read_text())  # never torn
+    assert raw["schema"] == plancache.SCHEMA_VERSION
+    assert len(raw["plans"]) == 5
+
+
+def test_interleaved_writers_both_survive(cache):
+    """Two handles to the same file: load-modify-write + atomic rename
+    means the last writer keeps both keys (it re-read the other's)."""
+    a = plancache.PlanCache(cache.path)
+    b = plancache.PlanCache(cache.path)
+    a.put("from_a", PLAN)
+    b.put("from_b", PLAN)
+    final = plancache.PlanCache(cache.path).load()
+    assert set(final) == {"from_a", "from_b"}
+
+
+def test_threaded_puts_never_corrupt_the_file(cache):
+    """Racing writers may drop each other's updates (last-write-wins
+    over distinct snapshots) but the file itself stays parseable with
+    the right schema after every interleaving."""
+    def work(tag):
+        for i in range(10):
+            cache.put(f"{tag}{i}", PLAN)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in ("x", "y", "z")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    raw = json.loads(cache.path.read_text())
+    assert raw["schema"] == plancache.SCHEMA_VERSION
+    assert all(isinstance(v["plan"], dict) for v in raw["plans"].values())
+
+
+# ------------------------------------------------------------- eviction
+def test_eviction_drops_oldest_first(cache, monkeypatch):
+    monkeypatch.setattr(plancache, "MAX_ENTRIES", 3)
+    times = iter(range(100))
+    monkeypatch.setattr(plancache.time, "time", lambda: next(times))
+    for i in range(6):
+        cache.put(f"k{i}", PLAN)
+    plans = cache.load()
+    assert set(plans) == {"k3", "k4", "k5"}
+
+
+def test_clear_removes_file(cache):
+    cache.put("k", PLAN)
+    cache.clear()
+    assert not cache.path.exists()
+    cache.clear()  # idempotent
+
+
+# ------------------------------------------------------------ cache key
+def test_cache_key_deterministic_and_discriminating():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(1, 100, 2048).astype(np.float32))
+    k1 = plancache.cache_key("topn_det", (x,), dict(N=8))
+    assert k1 == plancache.cache_key("topn_det", (x,), dict(N=8))
+    # algo, params, and m-bucket all discriminate
+    assert k1 != plancache.cache_key("distinct", (x,), dict(N=8))
+    assert k1 != plancache.cache_key("topn_det", (x,), dict(N=16))
+    assert k1 != plancache.cache_key("topn_det", (x[:256],), dict(N=8))
+    # same m-bucket, same distribution → same key (plans transfer)
+    y = jnp.asarray(rng.integers(1, 100, 2500).astype(np.float32))
+    assert plancache.cache_key("topn_det", (y,), dict(N=8)) == k1
+
+
+def test_cache_key_fingerprints_distribution():
+    n = 2048
+    few = jnp.asarray(np.arange(n) % 4).astype(jnp.float32)
+    many = jnp.asarray(np.arange(n)).astype(jnp.float32)
+    assert (plancache.cache_key("distinct", (few,), {})
+            != plancache.cache_key("distinct", (many,), {}))
+
+
+def test_m_bucket():
+    assert plancache.m_bucket(1) == 0
+    assert plancache.m_bucket(1024) == 10
+    assert plancache.m_bucket(2047) == 10
+    assert plancache.m_bucket(2048) == 11

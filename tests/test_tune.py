@@ -1,0 +1,269 @@
+"""Self-tuning plan search: mask invariance + race protocol.
+
+The tuner's contract has two halves, tested separately:
+
+* every plan `tune` can possibly select produces a keep mask
+  BIT-IDENTICAL to the analytic incumbent's (plans change speed, never
+  results) — property-tested over seeds for all six algorithms on
+  suite-shaped streams, including mesh/resident placements on the
+  forced 8-device platform;
+* the race itself: incumbent first, early-exit gate, time budget,
+  winner persistence and cache short-circuit — all with *injected*
+  timings so CI never depends on wall clocks to pick winners.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypstub import given, settings, st
+from repro.core import engine, plancache, planner
+from repro.query import QuerySpec, Table, run_query, workloads
+
+SMALL = 1511  # prime: every shard count exercises the padded tail
+
+
+def _bed(algo, seed=0, m=SMALL):
+    tables = workloads.tpch_tables(scale=m, seed=seed)
+    return workloads.engine_streams(algo, tables)
+
+
+def _mask(algo, streams, params, plan):
+    r = engine.execute_plan(algo, *streams, plan=plan, **params)
+    return np.asarray(r.keep)
+
+
+# ------------------------------------------------------ mask invariance
+@pytest.mark.parametrize("algo", engine.ALGORITHMS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_candidate_masks_identical_to_analytic(algo, seed):
+    streams, params = _bed(algo, seed)
+    incumbent = planner.analytic_plan(algo, streams, params)
+    plans = planner.candidate_plans(algo, streams, params,
+                                    incumbent=incumbent)
+    assert plans[0] == incumbent
+    base = _mask(algo, streams, params, incumbent)
+    for plan in plans[1:]:
+        got = _mask(algo, streams, params, plan)
+        assert np.array_equal(got, base), plan.key()
+
+
+@pytest.mark.parametrize("algo", engine.ALGORITHMS)
+def test_mesh_and_resident_candidates_covered(algo):
+    """At S=8 on the 8-device platform the grid must include mesh
+    plans with both pass-2 placements and >1 device spreads, and they
+    all still reproduce the two_pass mask."""
+    streams, params = _bed(algo)
+    incumbent = planner.analytic_plan(algo, streams, params, shards=8)
+    plans = planner.candidate_plans(algo, streams, params,
+                                    incumbent=incumbent)
+    modes = {p.mode for p in plans}
+    assert modes == {"two_pass", "mesh"}
+    mesh_plans = [p for p in plans if p.mode == "mesh"]
+    assert {p.pass2 for p in mesh_plans} == {"master", "mesh"}
+    assert max(p.num_devices for p in mesh_plans) == 8
+    base = _mask(algo, streams, params,
+                 planner.Plan(mode="two_pass", shards=8))
+    for plan in plans:
+        assert np.array_equal(_mask(algo, streams, params, plan),
+                              base), plan.key()
+
+
+@given(seed=st.integers(min_value=0, max_value=7),
+       m=st.sampled_from([257, 1024, 1511]))
+@settings(max_examples=10, deadline=None)
+def test_tune_selection_mask_invariant_property(seed, m):
+    """Whatever the race selects (forced via injected timings that make
+    the LAST candidate win), the final mask equals the incumbent's."""
+    algo = workloads.SUITE[seed % 2].algo  # groupby / topn_det beds
+    streams, params = _bed(algo, seed % 3, m)
+    plans = planner.candidate_plans(algo, streams, params)
+    order = []
+
+    def measure(plan, thunk):
+        order.append(plan.key())
+        return float(len(plans) - len(order))  # later = faster
+
+    res = planner.tune(algo, streams, params, measure=measure,
+                       exit_factor=1e9, use_cache=False)
+    assert res.plan.key() == order[-1]
+    assert np.array_equal(_mask(algo, streams, params, res.plan),
+                          _mask(algo, streams, params, plans[0]))
+
+
+# ------------------------------------------------------- race protocol
+def test_race_incumbent_first_and_exit_gate():
+    streams, params = _bed("topn_det")
+    fake = iter([100.0, 10.0, 1.0])
+    seen = []
+
+    def measure(plan, thunk):
+        seen.append(plan.key())
+        return next(fake)
+
+    res = planner.tune("topn_det", streams, params, measure=measure,
+                       exit_factor=1.5, use_cache=False)
+    # 10us * 1.5 <= 100us: gate fires on the first challenger, the
+    # third candidate is never raced
+    assert len(seen) == 2
+    assert res.source == "race"
+    assert seen[0] == planner.analytic_plan(
+        "topn_det", streams, params).key()
+    assert res.plan.key() == seen[1]
+    assert res.incumbent_us == 100.0 and res.best_us == 10.0
+    assert res.speedup_x == pytest.approx(10.0)
+
+
+def test_race_zero_budget_keeps_incumbent():
+    streams, params = _bed("topn_det")
+    calls = []
+    res = planner.tune("topn_det", streams, params,
+                       measure=lambda p, t: calls.append(p) or 50.0,
+                       time_budget_s=0.0, use_cache=False)
+    assert len(calls) == 1  # only the incumbent's own probe ran
+    assert res.plan == planner.analytic_plan("topn_det", streams, params)
+    assert res.speedup_x == 1.0
+
+
+def test_speedup_never_below_one():
+    """The incumbent is in the race, so a winner can't be slower."""
+    streams, params = _bed("topn_det")
+    res = planner.tune("topn_det", streams, params, use_cache=False,
+                       measure=lambda p, t: 10.0)  # all plans tie
+    assert res.plan == planner.analytic_plan("topn_det", streams, params)
+    assert res.speedup_x >= 1.0
+
+
+def test_winner_persisted_and_cache_short_circuits(tmp_path):
+    streams, params = _bed("topn_det")
+    cache = plancache.PlanCache(tmp_path / "plans.json")
+    first = planner.tune("topn_det", streams, params, cache=cache,
+                         measure=lambda p, t: 10.0)
+    assert first.source == "race"
+    assert (tmp_path / "plans.json").exists()
+
+    def boom(plan, thunk):
+        raise AssertionError("cache hit must not race")
+
+    second = planner.tune("topn_det", streams, params, cache=cache,
+                          measure=boom)
+    assert second.source == "cache"
+    assert second.plan == first.plan
+
+
+def test_cached_mode_miss_is_analytic_and_never_writes(tmp_path):
+    streams, params = _bed("topn_det")
+    cache = plancache.PlanCache(tmp_path / "plans.json")
+    res = planner.resolve_plan("topn_det", streams, params,
+                               tune_mode="cached", cache=cache)
+    assert res.source == "analytic"
+    assert res.plan == planner.analytic_plan("topn_det", streams, params)
+    assert not (tmp_path / "plans.json").exists()
+
+
+def test_probe_prefix_bounded():
+    """The race times a sampled prefix, not the full stream."""
+    streams, params = _bed("topn_det", m=4096)
+    sizes = []
+
+    def measure(plan, thunk):
+        sizes.append(True)
+        return 10.0
+
+    res = planner.tune("topn_det", streams, params, use_cache=False,
+                       probe_entries=256, measure=measure)
+    # winner still executes fine on the full stream
+    full = engine.execute_plan("topn_det", *streams, plan=res.plan,
+                               **params)
+    assert full.keep.shape == (4096,)
+
+
+def test_corrupt_cached_plan_falls_back_to_race(tmp_path):
+    streams, params = _bed("topn_det")
+    cache = plancache.PlanCache(tmp_path / "plans.json")
+    key = plancache.cache_key("topn_det", streams, params)
+    cache.put(key, {"mode": "warp_drive", "shards": 8})
+    with pytest.warns(UserWarning, match="unusable cached plan"):
+        res = planner.tune("topn_det", streams, params, cache=cache,
+                           measure=lambda p, t: 10.0)
+    assert res.source == "race"
+
+
+# --------------------------------------------------- engine/query knob
+def test_engine_prune_tune_knob_mask_identical(monkeypatch):
+    streams, params = _bed("topn_det")
+    monkeypatch.setattr(planner, "MEASURE_HOOK", lambda p, t: 10.0)
+    base = engine.execute_plan(
+        "topn_det", *streams,
+        plan=planner.analytic_plan("topn_det", streams, params),
+        **params)
+    for tune in ("cached", "race"):
+        r = engine.engine_prune("topn_det", *streams, tune=tune,
+                                **params)
+        assert np.array_equal(np.asarray(r.keep), np.asarray(base.keep))
+
+
+def test_engine_prune_tune_rejects_tracers():
+    x = jnp.arange(64, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="concrete streams"):
+        jax.jit(lambda s: engine.engine_prune(
+            "topn_det", s, tune="race", N=8))(x)
+
+
+def test_engine_prune_bad_tune_value():
+    x = jnp.arange(64, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="tune must be one of"):
+        engine.engine_prune("topn_det", x, tune="always", N=8)
+
+
+def test_run_query_tune_rejects_mesh(monkeypatch):
+    t = Table("t", {"v": jnp.arange(100, dtype=jnp.float32)})
+    spec = QuerySpec("topn", ("v",), dict(mode="det", N=8))
+    with pytest.raises(ValueError, match="worker mesh"):
+        run_query(spec, t, mesh=object(), tune="race")
+
+
+def test_run_query_tune_matches_off(monkeypatch):
+    monkeypatch.setattr(planner, "MEASURE_HOOK", lambda p, t: 10.0)
+    rng = np.random.default_rng(3)
+    t = Table("t", {
+        "k": jnp.asarray(rng.integers(0, 40, 2000).astype(np.uint32)),
+        "v": jnp.asarray(rng.integers(1, 50, 2000).astype(np.float32)),
+    })
+    def out_eq(a, b):
+        if isinstance(a, dict):
+            return a == b
+        if isinstance(a, tuple):
+            return all(np.array_equal(np.asarray(x), np.asarray(y))
+                       for x, y in zip(a, b))
+        return np.array_equal(np.asarray(a), np.asarray(b))
+
+    for spec in (QuerySpec("topn", ("v",), dict(mode="det", N=16)),
+                 QuerySpec("groupby", ("k", "v"), dict(d=64, w=4))):
+        plain = run_query(spec, t)
+        tuned = run_query(spec, t, tune="race")
+        assert out_eq(plain["output"], tuned["output"]), spec.kind
+
+
+# ---------------------------------------------------------- plan object
+def test_plan_from_dict_validation():
+    good = planner.Plan(mode="mesh", shards=8, pass2="mesh",
+                        apply_block=1024, num_devices=4)
+    assert planner.Plan.from_dict(good.to_dict()) == good
+    base = good.to_dict()
+    for bad in (dict(base, mode="scan"), dict(base, mode="sharded"),
+                dict(base, shards=1), dict(base, shards="many"),
+                dict(base, pass2="nowhere"), dict(base, apply_block=-4),
+                dict(base, num_devices=3), dict(base, num_devices=0),
+                {}):
+        with pytest.raises(ValueError):
+            planner.Plan.from_dict(bad)
+
+
+def test_analytic_plan_shards_never_one():
+    """S=1 two_pass degrades to the scan body — a different mask
+    family — so the incumbent clamps to S>=2 even for tiny streams."""
+    x = jnp.arange(8, dtype=jnp.float32)
+    plan = planner.analytic_plan("topn_det", (x,), dict(N=2))
+    assert plan.shards >= 2
