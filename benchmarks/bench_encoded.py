@@ -1,0 +1,145 @@
+"""Encoded-column pruning benchmarks: prune before decode.
+
+Two claims land as gated rows:
+
+``encoded_{topn,distinct}_vs_decoded_x``
+    Run-level pruning of an RLE column (R runs) vs the flat sequential
+    scan of the decoded column (m entries). The run-level closed form
+    (kernels/rle_scan.py) does O(R) scan steps instead of O(m) — with
+    duplicate-heavy data (run length ~64) the structural win is ~R/m,
+    so the ratio is gated at the bench_gate default floor of 1x: the
+    compressed scan being *slower* than expanding would defeat the
+    layout. Masks are verified bit-identical before timing.
+
+``decode_skipped_ratio``
+    Late-materialization payoff for dictionary columns: the fraction of
+    entries whose decode never happens because pass 1 pruned them in
+    code space (1 - survivors/m). Informational (data-dependent).
+
+Full size: m = 2^18 (the flat comparand is a lax.scan — per-step
+dispatch dominates on CPU exactly as in bench_engine's scan rows).
+``--smoke`` shrinks to 2^12 for the CI canary.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distinct import distinct_prune as seq_distinct
+from repro.core.encoding import dict_encode, rle_encode, rle_expand
+from repro.core.engine import engine_prune
+from repro.core.topn import topn_det_prune
+from repro.kernels.ops import (rle_distinct_prune, rle_expand_mask,
+                               rle_topn_prune)
+
+from .common import emit, time_fn
+
+SMOKE = False
+RUN_LEN = 64          # duplicate-heavy: R = m / 64 runs
+
+
+def _m(log2_full: int) -> int:
+    return 1 << (12 if SMOKE else log2_full)
+
+
+def _rle_stream(m: int, card: int, seed: int = 0):
+    """Sorted low-cardinality stream: the natural RLE-friendly layout."""
+    rng = np.random.default_rng(seed)
+    v = np.sort(rng.integers(1, card, m // RUN_LEN).astype(np.float32))
+    v = np.repeat(v, RUN_LEN)[:m]
+    return jnp.asarray(v)
+
+
+def encoded_topn():
+    m, N, w = _m(18), 250, 8
+    v = _rle_stream(m, card=4096)
+    rv, rl = rle_encode(v)
+
+    # jit end to end: both sides pay one dispatch, the comparison is
+    # O(R) run-level scan + mask expansion vs decode + O(m) flat scan
+    @jax.jit
+    def run_level(rv, rl):
+        head, tstar = rle_topn_prune(rv, rl, N=N, w=w, use_ref=True)
+        return rle_expand_mask(head, tstar, rl, m)
+
+    @jax.jit
+    def decoded(rv, rl):
+        # the decoded path must first materialize the flat column
+        return topn_det_prune(rle_expand(rv, rl, total=m), N=N, w=w).keep
+
+    assert np.array_equal(np.asarray(run_level(rv, rl)),
+                          np.asarray(decoded(rv, rl)))
+    us_run = time_fn(run_level, rv, rl)
+    us_flat = time_fn(decoded, rv, rl)
+    emit("encoded_topn_runlevel_us", us_run,
+         f"R={rv.shape[0]} m=2^{m.bit_length() - 1}")
+    emit("encoded_topn_decoded_us", us_flat, f"m=2^{m.bit_length() - 1}")
+    emit("encoded_topn_vs_decoded_x", us_flat / us_run,
+         f"run-level scan of R={rv.shape[0]} runs vs flat m={m}")
+
+
+def encoded_distinct():
+    m, d, w = _m(18), 256, 4
+    rng = np.random.default_rng(1)
+    vals = np.repeat(rng.integers(0, 2048, m // RUN_LEN).astype(np.uint32),
+                     RUN_LEN)[:m]
+    v = jnp.asarray(vals)
+    rv, rl = rle_encode(v)
+
+    @jax.jit
+    def run_level(rv, rl):
+        rk = rle_distinct_prune(rv, d=d, w=w)
+        return rle_expand_mask(rk, None, rl, m)
+
+    @jax.jit
+    def decoded(rv, rl):
+        return seq_distinct(rle_expand(rv, rl, total=m), d=d, w=w).keep
+
+    assert np.array_equal(np.asarray(run_level(rv, rl)),
+                          np.asarray(decoded(rv, rl)))
+    us_run = time_fn(run_level, rv, rl)
+    us_flat = time_fn(decoded, rv, rl)
+    emit("encoded_distinct_runlevel_us", us_run,
+         f"R={rv.shape[0]} m=2^{m.bit_length() - 1}")
+    emit("encoded_distinct_decoded_us", us_flat,
+         f"m=2^{m.bit_length() - 1}")
+    emit("encoded_distinct_vs_decoded_x", us_flat / us_run,
+         f"run-level probes of R={rv.shape[0]} runs vs flat m={m}")
+
+
+def decode_skipped():
+    """Dictionary column through the engine: survivors / m."""
+    m, N, w = _m(16), 250, 8
+    rng = np.random.default_rng(2)
+    vals = rng.choice(rng.random(4096).astype(np.float32) * 1e4 + 1, m)
+    codes, enc = dict_encode(vals)
+    r = engine_prune("topn_det", codes, mode="two_pass", shards=8,
+                     encoding=enc, N=N, w=w)
+    survivors = int(np.asarray(r.keep).sum())
+    skipped = 1.0 - survivors / m
+    emit("decode_skipped_ratio", skipped,
+         f"survivors={survivors}/{m}: only these rows ever decode",
+         precision=3)
+
+
+def run(smoke: bool = False):
+    global SMOKE
+    SMOKE = smoke
+    encoded_topn()
+    encoded_distinct()
+    decode_skipped()
+
+
+if __name__ == "__main__":
+    import sys
+
+    from .common import write_results
+
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    run(smoke=smoke)
+    if smoke:
+        print("smoke run: BENCH_results.json left untouched")
+    else:
+        print(f"wrote {write_results()}")

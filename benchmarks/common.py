@@ -34,9 +34,11 @@ def time_fn(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, us: float, derived: str = ""):
-    RESULTS[name] = round(float(us), 1)
-    print(f"{name},{us:.1f},{derived}")
+def emit(name: str, us: float, derived: str = "", precision: int = 1):
+    """Record + print one row. ``precision`` matters for sub-unit
+    ratio rows (a 0.97 decode-skip fraction must not round to 1.0)."""
+    RESULTS[name] = round(float(us), precision)
+    print(f"{name},{us:.{precision}f},{derived}")
 
 
 def write_results(path: pathlib.Path | str | None = None):

@@ -10,8 +10,8 @@ unsupported predicate (Ex. 1), DISTINCT (Ex. 2), TOP-N (Ex. 3), JOIN
 import numpy as np
 import jax.numpy as jnp
 
-from repro import core
-from repro.query import QuerySpec, make_products_ratings, run_query
+from repro import QuerySpec, core, run_query
+from repro.query import make_products_ratings
 
 NAMES = {1: "Burger", 2: "Pizza", 3: "Fries", 4: "Jello", 5: "Cheetos"}
 SELLERS = {1: "McCheetah", 2: "Papizza", 3: "JellyFish"}

@@ -72,7 +72,8 @@ FLOORS = {
 # classify() names the specific unit; "_eps" gates like "_qps"
 SUFFIXES = ("_p50_us", "_p99_us", "_us", "_x", "_qps", "_eps",
             "_ratio", "_count")
-GATED_PREFIXES = ("engine_", "stream_", "tpch_")
+GATED_PREFIXES = ("engine_", "stream_", "tpch_", "encoded_",
+                  "decode_skipped_")
 
 # must precede any jax import (bench rows depend on the device count)
 if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -99,7 +100,8 @@ def main() -> int:
         print("bench_gate: no committed BENCH_results.json — gating "
               "only the within-run _x floors")
 
-    from benchmarks import bench_engine, bench_stream, bench_tpch, common
+    from benchmarks import (bench_encoded, bench_engine, bench_stream,
+                            bench_tpch, common)
 
     print("bench_gate: running bench_engine --smoke ...")
     bench_engine.run(smoke=True)
@@ -107,6 +109,8 @@ def main() -> int:
     bench_stream.run(smoke=True)
     print("bench_gate: running bench_tpch --smoke ...")
     bench_tpch.run(smoke=True)
+    print("bench_gate: running bench_encoded --smoke ...")
+    bench_encoded.run(smoke=True)
     fresh = dict(common.RESULTS)
 
     failures: list[str] = []

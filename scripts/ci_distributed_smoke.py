@@ -91,6 +91,26 @@ def worker(process_id: int, port: int) -> None:
     print(f"worker {process_id}: OK (mask equal across placements, "
           f"top-{N} superset holds, kept {int(masks['mesh'].sum())}/{M})")
 
+    # encoded TOP-N: the same query pruned in code space — uint32 codes
+    # sharded across both processes, the dictionary gather fused into
+    # pass 1 — must reproduce the decoded mask bit-for-bit across the
+    # gloo boundary (the mesh merge moves *code-derived* state)
+    from repro.core.encoding import dict_encode
+
+    codes_host, enc = dict_encode(host)
+    codes = jax.make_array_from_callback(
+        (M,), NamedSharding(mesh, P("shards")),
+        lambda idx: np.asarray(codes_host)[idx])
+    efn = jax.jit(lambda x: engine_prune(
+        "topn_det", x, mode="mesh", shards=SHARDS, mesh=mesh,
+        pass2="master", encoding=enc, N=N, w=8).keep)
+    ekeep = np.asarray(jax.jit(
+        jnp.asarray, out_shardings=NamedSharding(mesh, P()))(efn(codes)))
+    assert (ekeep == masks["master"]).all(), \
+        "encoded mask != decoded mask across processes"
+    print(f"worker {process_id}: encoded OK (dict codes, "
+          f"lut size {enc.size}, mask == decoded)")
+
     # batched multi-query: Q mixed-param TOP-N queries in ONE program —
     # a single shard_map dispatch whose fused [Q, lanes, ...] state
     # all-gather crosses the 2-process boundary — must reproduce the

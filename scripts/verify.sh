@@ -41,5 +41,6 @@ export REPRO_PLAN_CACHE="${REPRO_PLAN_CACHE:-$(mktemp -d)/plan_cache.json}"
 
 python -m pytest -x -q "$@"
 python -m benchmarks.bench_engine --smoke
+python -m benchmarks.bench_encoded --smoke
 python examples/tpch_suite.py --smoke --tune=race
 echo "verify: OK"

@@ -1,4 +1,45 @@
 """Cheetah-JAX: switch-pruning query acceleration (Tirmazi et al., 2020)
 rebuilt as a TPU-native JAX framework + a multi-pod LM training/serving
-stack with the pruning abstraction as a first-class feature."""
+stack with the pruning abstraction as a first-class feature.
+
+Public surface — everything a typical caller needs lives here:
+
+    from repro import (engine_prune, engine_prune_stream, run_query,
+                       run_queries, QuerySpec, Table, ExecOptions,
+                       PlanCache)
+
+``engine_prune`` / ``engine_prune_stream`` are the raw pruning engine
+(pass 1 + merge + pass 2 over flat or encoded streams); ``run_query`` /
+``run_queries`` the relational layer over ``Table`` / ``QuerySpec``;
+``ExecOptions`` the one bundle of execution knobs every entry point
+accepts as ``options=``; ``PlanCache`` persists self-tuned plans.
+Deeper pieces stay importable from the subpackages (``repro.core``,
+``repro.query``, ``repro.kernels``).
+"""
 __version__ = "1.0.0"
+
+from .core.engine import engine_prune, engine_prune_batch  # noqa: E402
+from .core.options import ExecOptions  # noqa: E402
+from .core.plancache import PlanCache  # noqa: E402
+from .core.streaming import PruneStream, engine_prune_stream  # noqa: E402
+from .query.engine import QuerySpec, run_queries, run_query  # noqa: E402
+from .query.tables import (DictColumn, PlainColumn, RLEColumn,  # noqa: E402
+                           Table, dict_column, rle_column)
+
+__all__ = [
+    "DictColumn",
+    "ExecOptions",
+    "PlainColumn",
+    "PlanCache",
+    "PruneStream",
+    "QuerySpec",
+    "RLEColumn",
+    "Table",
+    "dict_column",
+    "engine_prune",
+    "engine_prune_batch",
+    "engine_prune_stream",
+    "rle_column",
+    "run_queries",
+    "run_query",
+]

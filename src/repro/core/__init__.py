@@ -38,6 +38,9 @@ from .planner import (SwitchProfile, ResourceFootprint, footprint,
                       DEFAULT_STALENESS_RATE, Plan, TuneResult,
                       TUNE_MODES, analytic_plan, candidate_plans, tune,
                       resolve_plan)
+from .encoding import (DictEncoding, dict_encode, normalize_encodings,
+                       rle_encode, rle_expand)
+from .options import DECODE_MODES, ExecOptions
 from .plancache import PlanCache, cache_key
 from .sketches import (BloomFilter, bloom_build, bloom_query, CountMin,
                        cms_build, cms_query)

@@ -1,0 +1,140 @@
+"""Encoded-column descriptors: prune before decode (late materialization).
+
+Columnar formats ship dictionary- and run-length-encoded columns, and
+decode is a large fraction of scan time ("Should I Hide My Duck in the
+Lake?" measures ~46% on data-lake scans).  With Cheetah-style pruning,
+typically 5-10% of entries survive pass 1, so decoding *only survivors*
+makes decode nearly free.  This module is the descriptor layer the
+engine threads through its ``_SPECS`` bodies:
+
+``DictEncoding``
+    A sorted dictionary ``lut`` (unique values ascending) plus the
+    contract that a stream of ``uint32`` codes decodes as ``lut[codes]``.
+    Because the dictionary is sorted, code order is value order, and
+    because it is a bijection on distinct values, equality of codes is
+    equality of values.  The engine fuses the O(1) gather ``lut[code]``
+    into the pass-1 scan/apply bodies, which makes the produced masks
+    *bit-identical* to scanning the eagerly decoded column — while the
+    decoded column is never materialized: only per-entry gathers inside
+    the (jitted) scan, and survivor rows at the master.
+
+``with_pad``/``pad_code``
+    Ragged shards/chunks pad streams with neutral fill values.  For a
+    constant fill (NEG for values, 0 for weights) the encoding grows one
+    extra dictionary slot holding the fill, and the engine pads the code
+    stream with ``pad_code`` — the pad decodes to exactly the plain
+    path's fill.  Streams whose plain fill is data-dependent (GROUP
+    BY/HAVING keys pad with the stream's own first element) are padded
+    with the stream's first *code* instead, which decodes to the same
+    first value; they never need a pad slot.
+
+``rle_encode``/``rle_expand``
+    Run-length layout (run values + run lengths).  Run-level pruning —
+    scanning R runs instead of m entries — lives in
+    ``kernels/rle_scan.py`` and ``kernels.ops.rle_*``; here are just the
+    layout helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DictEncoding:
+    """Sorted-dictionary encoding: ``decoded = lut[codes]``.
+
+    ``lut`` holds the distinct values in ascending order (``np.unique``
+    order), so codes are order-isomorphic to values.  ``pad_slot`` marks
+    a ``with_pad``-appended final slot holding a ragged-tail fill value;
+    ``size`` always reports the *logical* dictionary size (without it).
+    """
+
+    lut: jnp.ndarray
+    pad_slot: bool = False
+
+    @property
+    def size(self) -> int:
+        return int(self.lut.shape[0]) - int(self.pad_slot)
+
+    @property
+    def pad_code(self) -> int:
+        """Code of the pad slot (only valid after ``with_pad``)."""
+        if not self.pad_slot:
+            raise ValueError("encoding has no pad slot; call with_pad()")
+        return self.size
+
+    def decode(self, codes):
+        """Elementwise gather; works on codes of any shape."""
+        return jnp.take(self.lut, codes.astype(jnp.int32), axis=0)
+
+    def with_pad(self, fill) -> "DictEncoding":
+        """Return an encoding with one extra slot decoding to ``fill``."""
+        if self.pad_slot:
+            return self
+        tail = jnp.asarray(fill, dtype=self.lut.dtype)[None]
+        return DictEncoding(lut=jnp.concatenate([self.lut, tail]),
+                            pad_slot=True)
+
+
+def dict_encode(values):
+    """Encode ``values`` -> (uint32 codes, DictEncoding).
+
+    The dictionary is the sorted unique values, so the encoding is
+    order-preserving (code comparisons == value comparisons) and
+    injective (code equality == value equality).
+    """
+    vals = np.asarray(values)
+    dictionary, codes = np.unique(vals, return_inverse=True)
+    codes = codes.reshape(vals.shape).astype(np.uint32)
+    return jnp.asarray(codes), DictEncoding(lut=jnp.asarray(dictionary))
+
+
+def rle_encode(values):
+    """Run-length encode a 1-D array -> (run_values, int32 run_lengths)."""
+    v = np.asarray(values)
+    if v.ndim != 1:
+        raise ValueError("rle_encode expects a 1-D array")
+    if v.shape[0] == 0:
+        return jnp.asarray(v), jnp.zeros((0,), jnp.int32)
+    change = np.concatenate([[True], v[1:] != v[:-1]])
+    starts = np.nonzero(change)[0]
+    lengths = np.diff(np.concatenate([starts, [v.shape[0]]]))
+    return jnp.asarray(v[starts]), jnp.asarray(lengths.astype(np.int32))
+
+
+def rle_expand(run_values, run_lengths, total: int | None = None):
+    """Expand runs back to the flat per-row array (inverse of rle_encode).
+
+    With ``total`` (the static row count) this is pure jnp and traceable
+    under jit; without it the lengths are summed on the host.
+    """
+    m = int(np.asarray(run_lengths).sum()) if total is None else int(total)
+    return jnp.repeat(jnp.asarray(run_values), jnp.asarray(run_lengths),
+                      total_repeat_length=m)
+
+
+def normalize_encodings(encoding, nstreams: int) -> tuple:
+    """Canonicalize the ``encoding=`` argument to a per-stream tuple.
+
+    Accepts ``None`` (no stream encoded), a single ``DictEncoding``
+    (applies to stream 0), or a sequence of ``DictEncoding | None``
+    shorter than or equal to the stream count (padded with ``None`` —
+    e.g. for the engine's appended validity column).
+    """
+    if encoding is None:
+        return (None,) * nstreams
+    if isinstance(encoding, DictEncoding):
+        encs = (encoding,)
+    else:
+        encs = tuple(encoding)
+    if len(encs) > nstreams:
+        raise ValueError(
+            f"encoding has {len(encs)} entries for {nstreams} streams")
+    for e in encs:
+        if e is not None and not isinstance(e, DictEncoding):
+            raise TypeError(f"encoding entries must be DictEncoding or "
+                            f"None, got {type(e).__name__}")
+    return encs + (None,) * (nstreams - len(encs))

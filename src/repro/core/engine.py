@@ -109,6 +109,8 @@ from .. import compat
 from ..constants import NEG
 from .distinct import distinct_prune
 from .distinct import init_state as distinct_init
+from .encoding import DictEncoding, normalize_encodings
+from .options import ExecOptions
 from .groupby import GroupByState, groupby_init, groupby_prune
 from .hashing import hash_mod
 from .having import having_init, having_prune
@@ -476,6 +478,90 @@ _SPECS: dict[str, _AlgoSpec] = {
 }
 
 
+# ------------------------------------------------------- encoded streams
+# Streams whose plain-path pad fill is the stream's own first element
+# (GROUP BY / HAVING keys): their encoded pad is the stream's first
+# *code*, which decodes to exactly the plain fill — no pad slot needed.
+# All other encoded streams pad with the ``with_pad`` slot code, which
+# decodes to the plain path's constant fill (NEG / 0).
+_FIRST_ELEMENT_PADS: dict[str, tuple[int, ...]] = {
+    "groupby": (0,),
+    "having": (0,),
+}
+
+
+def _decode_streams(streams, encs):
+    """Gather each encoded stream through its dictionary (fused decode)."""
+    return tuple(s if e is None else e.decode(s)
+                 for s, e in zip(streams, encs))
+
+
+def _pads_probe(streams, encs):
+    """Length-1 decoded slices: enough for every pads fn (they consult
+    only ``stream[0]`` and dtypes) without materializing a full decode."""
+    return tuple(s[:1] if e is None else e.decode(s[:1])
+                 for s, e in zip(streams, encs))
+
+
+def _padded_encodings(algo: str, spec: _AlgoSpec, encs, streams, params):
+    """Grow each constant-fill encoding by one pad slot (see above)."""
+    first_elem = _FIRST_ELEMENT_PADS.get(algo, ())
+    plain = spec.pads(_pads_probe(streams, encs), params)
+    return tuple(
+        e if e is None or i in first_elem else e.with_pad(plain[i])
+        for i, e in enumerate(encs))
+
+
+def _encoded_spec(algo: str, spec: _AlgoSpec, encs) -> _AlgoSpec:
+    """Wrap an _AlgoSpec so its bodies run on dictionary-encoded streams.
+
+    ``encs`` is a per-stream tuple of pad-slot-ready ``DictEncoding``
+    (from ``_padded_encodings``) or ``None``.  The wrapped scan/apply/
+    resume/init decode each encoded stream via the O(1) ``lut[code]``
+    gather fused into the (jitted) body, so the masks are bit-identical
+    to running the original spec on eagerly decoded streams — while the
+    decoded column is never stored.  The wrapped ``pads`` returns
+    code-space fills that decode to exactly the plain path's fills, so
+    ragged shards, chunked applies and ragged streaming micro-batches
+    stay bit-identical too.
+    """
+    first_elem = _FIRST_ELEMENT_PADS.get(algo, ())
+
+    def dec(streams):
+        return _decode_streams(streams, encs)
+
+    def pads(streams, p):
+        plain = spec.pads(_pads_probe(streams, encs), p)
+        return tuple(
+            plain[i] if encs[i] is None
+            else (streams[i][0] if i in first_elem else encs[i].pad_code)
+            for i in range(len(plain)))
+
+    return dataclasses.replace(
+        spec,
+        scan=lambda st, p: spec.scan(dec(st), p),
+        apply=lambda mg, st, k1, p: spec.apply(mg, dec(st), k1, p),
+        pads=pads,
+        resume=None if spec.resume is None else
+        (lambda s0, st, p: spec.resume(s0, dec(st), p)),
+        init=None if spec.init is None else
+        (lambda st, p: spec.init(dec(st), p)),
+    )
+
+
+def _encoded_bspec(bspec, encs):
+    """Batched counterpart: decode streams inside the BatchSpec bodies."""
+    def dec(streams):
+        return _decode_streams(streams, encs)
+
+    return dataclasses.replace(
+        bspec,
+        scan=lambda st, qp, caps: bspec.scan(dec(st), qp, caps),
+        apply=lambda mg, st, k1, qp, caps: bspec.apply(
+            mg, dec(st), k1, qp, caps),
+    )
+
+
 # ------------------------------------------------------------------ engine
 def shard_stack(arr: jnp.ndarray, shards: int, fill=0) -> jnp.ndarray:
     """[m, ...] -> [S, ceil(m/S), ...] contiguous chunks, tail-padded.
@@ -798,11 +884,13 @@ def _resolve_shards(algo: str, streams, params, mode: str, shards,
     return max(1, min(s, m))
 
 
-def engine_prune(algo: str, *streams, mode: str = "scan",
+def engine_prune(algo: str, *streams, options: ExecOptions | None = None,
+                 mode: str | None = None,
                  shards: int | str | None = None, mesh=None,
                  mesh_axis: str = "shards", apply_block: int | None = None,
-                 pass2: str = "master", tune: str = "off",
-                 plan_cache=None, **params) -> PruneResult:
+                 pass2: str | None = None, tune: str | None = None,
+                 plan_cache=None, encoding=None, decode: str | None = None,
+                 **params) -> PruneResult:
     """Run pruner `algo` over its stream(s) in the requested mode.
 
     streams: the algorithm's data arrays, all sharing leading dim m
@@ -844,24 +932,60 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
     flatten with ``unshard_mask``), or ``"auto"`` (the planner's
     m·f vs state_bytes·D + (m/D)·f placement rule).
 
+    options: an ``ExecOptions`` bundling mode/shards/pass2/apply_block/
+    tune/plan_cache/decode; the individual kwargs keep working and
+    conflicts warn (options= wins).
+
+    encoding / decode: prune-before-decode. ``encoding`` is a
+    ``DictEncoding`` (stream 0) or a per-stream tuple of
+    ``DictEncoding | None``; encoded streams carry uint32 codes and the
+    engine fuses the ``lut[code]`` gather into pass 1, so the keep mask
+    is bit-identical to pruning the eagerly decoded streams while the
+    decoded column is never materialized. ``decode="eager"`` decodes
+    everything up front instead (the differential baseline);
+    ``"auto"``/``"late"`` (default) prune on codes.
+
     Returns a PruneResult whose keep mask is over the original m
     entries (stacked [S, n] over the padded stream when pass2 resolves
     to "mesh"). state is the stacked per-shard states (`sharded`), the
     merged global state (`two_pass`/`mesh`), or the final scan state
     (`scan`).
     """
+    opts = ExecOptions.resolve(options, mode=mode, shards=shards,
+                               pass2=pass2, apply_block=apply_block,
+                               tune=tune, plan_cache=plan_cache,
+                               decode=decode)
+    mode = opts.mode if opts.mode is not None else "scan"
+    shards = opts.shards
+    pass2 = opts.pass2 if opts.pass2 is not None else "master"
+    apply_block = opts.apply_block
+    tune = opts.tune if opts.tune is not None else "off"
+    plan_cache = opts.plan_cache
+    decode = opts.decode if opts.decode is not None else "auto"
+
+    streams = tuple(s for s in streams if s is not None)
+    encs = normalize_encodings(encoding, len(streams))
+    encoded = any(e is not None for e in encs)
+    if encoded and decode == "eager":
+        streams = _decode_streams(streams, encs)
+        encs = (None,) * len(streams)
+        encoded = False
+
     if tune != "off":
         if tune not in planner.TUNE_MODES:
             raise ValueError(f"tune must be one of {planner.TUNE_MODES}, "
                              f"got {tune!r}")
-        live = tuple(s for s in streams if s is not None)
-        if any(isinstance(s, jax.core.Tracer) for s in live):
+        if any(isinstance(s, jax.core.Tracer) for s in streams):
             raise ValueError(
                 "tune= needs concrete streams (the race times real "
                 "executions) — call outside jit, or pass tune='off'")
-        resolved = planner.resolve_plan(algo, live, params,
+        # the race runs candidates on the raw code streams (uniform
+        # across candidates, so the comparison is fair); the winning
+        # plan then executes with the decode gather fused in
+        resolved = planner.resolve_plan(algo, streams, params,
                                         tune_mode=tune, cache=plan_cache)
-        return execute_plan(algo, *live, plan=resolved.plan, **params)
+        return execute_plan(algo, *streams, plan=resolved.plan,
+                            encoding=encs if encoded else None, **params)
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if pass2 not in PASS2:
@@ -870,7 +994,6 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
         raise ValueError(
             f"pass2={pass2!r} only applies to mode='mesh' (got {mode!r})")
     spec = _SPECS[algo]  # KeyError = unknown algorithm
-    streams = tuple(s for s in streams if s is not None)
     m = streams[0].shape[0]
 
     if mode == "mesh":
@@ -883,6 +1006,10 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
         # mesh keeps its documented output contract even at S=1 (the
         # degenerate 1-lane mesh: stacked mask, merged state) instead of
         # silently returning the scan's flat mask and raw scan state
+        if encoded:
+            spec = _encoded_spec(
+                algo, spec, _padded_encodings(algo, spec, encs, streams,
+                                              params))
         return spec.scan(streams, params)
     if shards > m:
         raise ValueError(f"shards={shards} exceeds stream length {m}")
@@ -893,6 +1020,13 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
         # pads must be inert under *any* aggregate: append a validity
         # column (True for real entries) the scan body gates folds on
         streams = streams + (jnp.ones(m, jnp.bool_),)
+        encs = encs + (None,)
+    if encoded:
+        # from here on every body (scan/apply/resume/pads) runs on the
+        # wrapped spec: decode is fused into pass 1, and pads become
+        # code-space fills that decode to the plain path's fills
+        encs = _padded_encodings(algo, spec, encs, streams, params)
+        spec = _encoded_spec(algo, spec, encs)
     # pads are only consulted when the final shard actually needs filling
     fills = (spec.pads(streams, params) if m % shards
              else (0,) * len(streams))
@@ -939,7 +1073,8 @@ def engine_prune(algo: str, *streams, mode: str = "scan",
                        emitted=emitted)
 
 
-def execute_plan(algo: str, *streams, plan, **params) -> PruneResult:
+def execute_plan(algo: str, *streams, plan, encoding=None,
+                 **params) -> PruneResult:
     """Run one tuned/analytic ``planner.Plan`` through the engine.
 
     The uniform execution contract behind `tune=`: every plan in the
@@ -956,7 +1091,7 @@ def execute_plan(algo: str, *streams, plan, **params) -> PruneResult:
         res = engine_prune(algo, *streams, mode="mesh",
                            shards=plan.shards, mesh=mesh,
                            apply_block=plan.apply_block,
-                           pass2=plan.pass2, **params)
+                           pass2=plan.pass2, encoding=encoding, **params)
         keep = res.keep
         if keep.ndim == 2:  # resident pass 2: stacked [S, n]
             keep = unshard_mask(keep, m)
@@ -966,11 +1101,12 @@ def execute_plan(algo: str, *streams, plan, **params) -> PruneResult:
         return dataclasses.replace(
             res, keep=jax.device_put(keep, jax.devices()[0]))
     return engine_prune(algo, *streams, mode="two_pass",
-                        shards=plan.shards,
+                        shards=plan.shards, encoding=encoding,
                         apply_block=plan.apply_block, **params)
 
 
 def execute_plan_batch(algo: str, queries, *streams, plan,
+                       encoding=None,
                        device_budget_bytes: int | None = None
                        ) -> BatchPruneResult:
     """Batched counterpart of ``execute_plan``: one tuned plan for Q
@@ -979,6 +1115,7 @@ def execute_plan_batch(algo: str, queries, *streams, plan,
     streams = tuple(s for s in streams if s is not None)
     m = int(streams[0].shape[0])
     kwargs = dict(shards=plan.shards, apply_block=plan.apply_block,
+                  encoding=encoding,
                   device_budget_bytes=device_budget_bytes)
     if plan.mode == "mesh":
         mesh = default_mesh("shards", num_devices=plan.num_devices)
@@ -1161,11 +1298,13 @@ def _concat_waves(parts):
 
 
 def engine_prune_batch(algo: str, queries, *streams,
-                       mode: str = "two_pass",
+                       options: ExecOptions | None = None,
+                       mode: str | None = None,
                        shards: int | None = None, mesh=None,
                        mesh_axis: str = "shards",
                        apply_block: int | None = None,
                        pass2: str | None = None,
+                       encoding=None, decode: str | None = None,
                        device_budget_bytes: int | None = None
                        ) -> BatchPruneResult:
     """Run Q same-family queries over shared stream(s) as one program.
@@ -1195,6 +1334,15 @@ def engine_prune_batch(algo: str, queries, *streams,
     bool[Q, S, n] when pass 2 ran resident (``unshard_mask_batch``
     flattens), with the admission plan attached.
     """
+    opts = ExecOptions.resolve(options, mode=mode, shards=shards,
+                               pass2=pass2, apply_block=apply_block,
+                               decode=decode)
+    opts.require_unset("engine_prune_batch", "tune", "plan_cache")
+    mode = opts.mode if opts.mode is not None else "two_pass"
+    shards = opts.shards
+    pass2 = opts.pass2
+    apply_block = opts.apply_block
+    decode = opts.decode if opts.decode is not None else "auto"
     if mode not in MODES_BATCH:
         raise ValueError(
             f"mode must be one of {MODES_BATCH}, got {mode!r} "
@@ -1214,6 +1362,12 @@ def engine_prune_batch(algo: str, queries, *streams,
         raise ValueError("engine_prune_batch needs at least one query")
     qp, caps = bspec.build(queries)
     streams = tuple(s for s in streams if s is not None)
+    encs = normalize_encodings(encoding, len(streams))
+    encoded = any(e is not None for e in encs)
+    if encoded and decode == "eager":
+        streams = _decode_streams(streams, encs)
+        encs = (None,) * len(streams)
+        encoded = False
     m = streams[0].shape[0]
 
     ndev = ((mesh.shape[mesh_axis] if mesh is not None
@@ -1227,6 +1381,9 @@ def engine_prune_batch(algo: str, queries, *streams,
     scan_only = mode == "scan" or (shards <= 1 and mode != "mesh")
 
     if scan_only:
+        if encoded:
+            encs = _padded_encodings(algo, spec, encs, streams, {})
+            bspec = _encoded_bspec(bspec, encs)
         lane_shapes = tuple(jax.ShapeDtypeStruct(s.shape, s.dtype)
                             for s in streams)
         per_query = _batch_query_bytes(bspec, qp, caps, lane_shapes, 1)
@@ -1239,6 +1396,11 @@ def engine_prune_batch(algo: str, queries, *streams,
             mesh = _mesh_for_shards(shards, mesh_axis)
         if m % shards and spec.pad_validity and len(streams) < 3:
             streams = streams + (jnp.ones(m, jnp.bool_),)
+            encs = encs + (None,)
+        if encoded:
+            encs = _padded_encodings(algo, spec, encs, streams, {})
+            spec = _encoded_spec(algo, spec, encs)
+            bspec = _encoded_bspec(bspec, encs)
         fills = (spec.pads(streams, {}) if m % shards
                  else (0,) * len(streams))
         shard_streams = tuple(shard_stack(s, shards, f)

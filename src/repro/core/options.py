@@ -1,0 +1,87 @@
+"""ExecOptions: one frozen bundle for the engine's execution knobs.
+
+Six knobs (``mode``/``shards``/``pass2``/``apply_block``/``tune``/
+``plan_cache``) used to be copy-pasted kwargs across ``engine_prune``,
+``engine_prune_batch``, ``engine_prune_stream``, ``run_query`` and
+``run_queries``; the encoded-column work adds a seventh (``decode``).
+``ExecOptions`` consolidates them: build one, pass it as ``options=`` to
+any entry point.  Fields default to ``None`` = "entry point's default",
+so one options object can be shared across entry points whose defaults
+differ (``engine_prune`` defaults ``mode="scan"``, the batch engine
+``mode="two_pass"``).
+
+Legacy kwargs keep working: each entry point funnels them through
+``ExecOptions.resolve``, which merges explicit kwargs into the options
+object and warns (``UserWarning``) when both specify the same knob with
+different values — ``options=`` wins.
+
+``decode`` governs encoded streams: ``"auto"``/``"late"`` prune on
+codes with the decode gather fused into pass 1 and materialize
+survivors only; ``"eager"`` decodes every stream up front (the escape
+hatch and differential-test baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+DECODE_MODES = ("auto", "late", "eager")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOptions:
+    """Execution knobs for the pruning engine entry points.
+
+    Every field defaults to ``None``, meaning "use the entry point's
+    default".  Entry points reject fields that do not apply to them
+    (e.g. ``mode`` on ``engine_prune_stream``) with a ``ValueError``
+    rather than silently ignoring them.
+    """
+
+    mode: str | None = None          # scan | sharded | two_pass | mesh
+    shards: Any = None               # int | "auto"
+    pass2: str | None = None         # master | mesh | auto
+    apply_block: int | None = None   # pass-2 chunk size
+    tune: str | None = None          # off | cached | race
+    plan_cache: Any = None           # PlanCache override for tune
+    decode: str | None = None        # auto | late | eager
+
+    def __post_init__(self):
+        if self.decode is not None and self.decode not in DECODE_MODES:
+            raise ValueError(f"decode must be one of {DECODE_MODES}, "
+                             f"got {self.decode!r}")
+
+    @classmethod
+    def resolve(cls, options: "ExecOptions | None", **kwargs,
+                ) -> "ExecOptions":
+        """Merge legacy kwargs into ``options``; ``options`` wins.
+
+        ``kwargs`` are the entry point's legacy keyword arguments with
+        ``None`` meaning "not specified".  When a knob is set both ways
+        with different values, a ``UserWarning`` is emitted and the
+        ``options`` value is used.
+        """
+        if options is None:
+            return cls(**kwargs)
+        if not isinstance(options, cls):
+            raise TypeError(f"options must be ExecOptions, "
+                            f"got {type(options).__name__}")
+        merged = {}
+        for field in dataclasses.fields(cls):
+            opt_v = getattr(options, field.name)
+            kw_v = kwargs.get(field.name)
+            if opt_v is not None and kw_v is not None and opt_v != kw_v:
+                warnings.warn(
+                    f"{field.name!r} specified both via options= "
+                    f"({opt_v!r}) and as a keyword ({kw_v!r}); "
+                    f"options= wins", UserWarning, stacklevel=3)
+            merged[field.name] = opt_v if opt_v is not None else kw_v
+        return cls(**merged)
+
+    def require_unset(self, entry: str, *names: str):
+        """Raise if any of ``names`` is set (knob not applicable)."""
+        for name in names:
+            if getattr(self, name) is not None:
+                raise ValueError(
+                    f"{entry} does not accept the {name!r} option")

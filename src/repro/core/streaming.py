@@ -68,8 +68,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import compat
 from . import planner
+from .encoding import normalize_encodings
 from .engine import (_SPECS, DEFAULT_MESH_APPLY_BLOCK, _apply_chunked,
-                     _mesh_for_shards, _mesh_lanes, calibrate_merge_cost)
+                     _decode_streams, _encoded_spec, _mesh_for_shards,
+                     _mesh_lanes, _padded_encodings, calibrate_merge_cost)
+from .options import ExecOptions
 
 
 @dataclasses.dataclass
@@ -111,15 +114,29 @@ class PruneStream:
     per fold (benchmark baseline — never faster).
     """
 
-    def __init__(self, algo: str, *, shards: int | None = None, mesh=None,
+    def __init__(self, algo: str, *, options: ExecOptions | None = None,
+                 shards: int | None = None, mesh=None,
                  mesh_axis: str = "shards", merge_every: int | str = "auto",
                  window: int = 4, donate: bool = True,
                  apply_block: int | None = None, retain: bool = True,
-                 **params):
+                 encoding=None, **params):
+        opts = ExecOptions.resolve(options, shards=shards,
+                                   apply_block=apply_block)
+        opts.require_unset("PruneStream", "mode", "pass2", "tune",
+                           "plan_cache")
+        shards = opts.shards
+        apply_block = opts.apply_block
         self.algo = algo
         self._spec = _SPECS[algo]  # KeyError = unknown algorithm
+        self._encoding = encoding
+        self._decode = opts.decode if opts.decode is not None else "auto"
+        self._enc_wrapped = encoding is None
         if self._spec.resume is None or self._spec.init is None:
             raise ValueError(f"{algo!r} has no streaming fold")
+        if shards is not None and not isinstance(shards, int):
+            raise ValueError(
+                f"PruneStream needs a concrete lane count, got "
+                f"shards={shards!r}")
         if shards is None:
             shards = (mesh.shape[mesh_axis] if mesh is not None
                       else len(jax.devices()))
@@ -283,6 +300,9 @@ class PruneStream:
         if self._closed:
             raise RuntimeError("stream is closed")
         streams = tuple(s for s in streams if s is not None)
+        if not self._enc_wrapped and self._decode == "eager":
+            streams = _decode_streams(
+                streams, normalize_encodings(self._encoding, len(streams)))
         np_streams = [np.asarray(s) for s in streams]
         b = int(np_streams[0].shape[0])
         if b == 0:
@@ -294,6 +314,16 @@ class PruneStream:
             # micro-batch runs the same 3-stream executable and the
             # lane-view stream matches a one-shot call with the column
             np_streams.append(np.ones(b, np.bool_))
+        if not self._enc_wrapped and self._decode != "eager":
+            # wrap once, at the final stream count (validity included):
+            # every later fold/merge/apply body decodes in place and the
+            # per-batch ragged pads become code-space fills
+            encs = normalize_encodings(self._encoding, len(np_streams))
+            encs = _padded_encodings(
+                self.algo, self._spec, encs,
+                tuple(jnp.asarray(s[:1]) for s in np_streams), self.params)
+            self._spec = _encoded_spec(self.algo, self._spec, encs)
+            self._enc_wrapped = True
         pad = S * nb - b
         if pad:
             fills = self._spec.pads(tuple(np_streams), self.params)
@@ -443,18 +473,20 @@ class PruneStream:
 
 
 def engine_prune_stream(algo: str, *streams, micro_batch: int = 4096,
+                        options: ExecOptions | None = None,
                         shards: int | None = None, mesh=None,
                         mesh_axis: str = "shards",
                         merge_every: int | str = "auto", window: int = 4,
                         donate: bool = True, apply_block: int | None = None,
-                        **params) -> StreamResult:
+                        encoding=None, **params) -> StreamResult:
     """One-shot convenience driver: chop ``streams`` into micro-batches
     and run them through a ``PruneStream``. The returned ``keep`` is in
     arrival order over the original m entries."""
-    stream = PruneStream(algo, shards=shards, mesh=mesh,
+    stream = PruneStream(algo, options=options, shards=shards, mesh=mesh,
                          mesh_axis=mesh_axis, merge_every=merge_every,
                          window=window, donate=donate,
-                         apply_block=apply_block, **params)
+                         apply_block=apply_block, encoding=encoding,
+                         **params)
     np_streams = [np.asarray(s) for s in streams if s is not None]
     m = np_streams[0].shape[0]
     for lo in range(0, m, micro_batch):

@@ -20,9 +20,10 @@ import jax.numpy as jnp
 
 from . import parallel, ref
 from .bloom_filter import bloom_build_kernel, bloom_query_kernel
-from .common import NEG
+from .common import NEG, POS
 from .cms_sketch import cms_build_kernel, cms_query_kernel
 from .distinct_prune import distinct_prune_kernel
+from .rle_scan import rle_topn_det_kernel, rle_topn_det_ref
 from .skyline_prune import skyline_prune_kernel
 from .topn_prune import topn_prune_kernel
 
@@ -172,6 +173,63 @@ def bloom_query(bits: jnp.ndarray, keys: jnp.ndarray, *, num_hashes: int = 3,
         ok = bloom_query_kernel(bits, k, num_hashes=num_hashes, block=block,
                                 seed=seed, interpret=_interpret())
     return ok[:m].astype(bool)
+
+
+def rle_topn_prune(run_values: jnp.ndarray, run_lengths: jnp.ndarray, *,
+                   N: int, w: int = 4, block: int = 256,
+                   use_ref: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run-level deterministic TOP-N over an RLE column — no expansion.
+
+    Returns per-run ``(head, tstar)`` int32[R]: within a run of length L
+    the flat keep mask is ``(pos < head) | (pos + 1 >= tstar)``
+    (``rle_expand_mask``), bit-identical to ``core.topn.topn_det_prune``
+    on the expanded stream. Work is O(R·w) instead of O(m·w).
+    """
+    rv, R = _pad_to(run_values.astype(jnp.float32), block, POS)
+    rl, _ = _pad_to(run_lengths.astype(jnp.int32), block, 0)  # (POS, 0) pads
+    if use_ref:
+        head, tstar = rle_topn_det_ref(rv, rl, N=N, w=w)
+    else:
+        head, tstar = rle_topn_det_kernel(rv, rl, N=N, w=w, block=block,
+                                          interpret=_interpret())
+    return head[:R], tstar[:R]
+
+
+def rle_distinct_prune(run_values: jnp.ndarray, *, d: int, w: int,
+                       policy: str = "lru", seed: int = 0) -> jnp.ndarray:
+    """Run-level DISTINCT: bool[R] keep mask over run *heads*.
+
+    Within a run every entry after the first hits the cache, and the hit
+    leaves the d×w state unchanged (FIFO skips the insert; the LRU
+    move-to-front of the just-inserted head slot is a no-op), so the
+    flat sequential scan's state evolution only depends on run heads.
+    Feeding run values through ``core.distinct.distinct_prune`` is
+    therefore *exact*: the flat mask is the run-head scatter
+    ``run_keep[rid] & (pos == 0)`` (``rle_expand_mask`` with
+    ``tstar=None``) — O(R) cache probes instead of O(m).
+    """
+    from ..core.distinct import distinct_prune as seq_distinct
+    return seq_distinct(jnp.asarray(run_values, jnp.uint32),
+                        d=d, w=w, policy=policy, seed=seed).keep.astype(bool)
+
+
+def rle_expand_mask(head: jnp.ndarray, tstar: jnp.ndarray | None,
+                    run_lengths: jnp.ndarray, total: int) -> jnp.ndarray:
+    """Flat bool[total] mask from per-run prefix∪suffix descriptors.
+
+    ``head`` is the per-run keep-prefix length (a bool run mask works:
+    True → 1). ``tstar=None`` drops the suffix term (DISTINCT head-only
+    scatter). ``total`` must equal ``sum(run_lengths)``.
+    """
+    rl = jnp.asarray(run_lengths, jnp.int32)
+    starts = jnp.cumsum(rl) - rl
+    rid = jnp.repeat(jnp.arange(rl.shape[0], dtype=jnp.int32), rl,
+                     total_repeat_length=total)
+    pos = jnp.arange(total, dtype=jnp.int32) - starts[rid]
+    keep = pos < jnp.asarray(head, jnp.int32)[rid]
+    if tstar is not None:
+        keep = keep | ((pos + 1) >= tstar[rid])
+    return keep
 
 
 def skyline_prune(points: jnp.ndarray, *, w: int, block: int = 256,

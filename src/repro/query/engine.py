@@ -32,7 +32,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat, core
-from .tables import Table
+from repro.constants import NEG
+from repro.core.options import ExecOptions
+from .tables import DictColumn, Table
 
 
 # replication checking stays off: workers return per-shard masks, not
@@ -66,7 +68,7 @@ def _check_tune(tune: str, mesh) -> None:
 
 def _engine_call(algo: str, streams: tuple, mesh, axis: str,
                  params: dict, tune: str = "off",
-                 plan_cache=None) -> core.PruneResult:
+                 plan_cache=None, encoding=None) -> core.PruneResult:
     """One engine invocation per query: mesh-backed when a mesh exists
     (S = one lane per worker on the data axis, pass 2 resident on the
     workers), sequential otherwise. The result's keep mask is
@@ -77,48 +79,83 @@ def _engine_call(algo: str, streams: tuple, mesh, axis: str,
     tune != "off" (meshless only) replaces the scan fallback with a
     cached/raced two-pass-family plan (see ``core.planner.tune``); the
     mask stays flat and bit-identical to the analytic plan's.
+
+    encoding: per-stream ``DictEncoding | None`` tuple — streams carry
+    codes and pass 1 prunes in code space (see ``core.engine``).
     """
     if tune != "off":
         tr = core.resolve_plan(algo, streams, params, tune_mode=tune,
                                cache=plan_cache)
-        return core.execute_plan(algo, *streams, plan=tr.plan, **params)
+        return core.execute_plan(algo, *streams, plan=tr.plan,
+                                 encoding=encoding, **params)
     if mesh is None:
-        return core.engine_prune(algo, *streams, mode="scan", **params)
+        return core.engine_prune(algo, *streams, mode="scan",
+                                 encoding=encoding, **params)
     r = core.engine_prune(algo, *streams, mode="mesh",
                           shards=mesh.shape[axis], mesh=mesh,
-                          mesh_axis=axis, pass2="mesh", **params)
+                          mesh_axis=axis, pass2="mesh",
+                          encoding=encoding, **params)
     m = streams[0].shape[0]
     return core.PruneResult(keep=core.unshard_mask(r.keep, m),
                             state=r.state, emitted=r.emitted)
 
 
-def _prepare(spec: QuerySpec, table: Table):
+def _code_stream(col, decode: str):
+    """(engine stream, encoding) for one column under the decode policy."""
+    if decode == "eager":
+        return col.decoded(), None
+    return col.code_stream()
+
+
+def _prepare(spec: QuerySpec, table: Table, decode: str = "auto"):
     """Per-kind stream building / engine params / master completion.
 
     Shared by `run_query` (one engine call) and `run_queries` (one
     batched call per compatible group): returns ``(algo, streams,
-    engine_params, complete)`` where ``complete`` maps a flat-mask
-    ``PruneResult`` to the user-facing result dict. join/filter have
-    bespoke bodies and are not prepared here.
+    encodings, engine_params, complete)`` where ``complete`` maps a
+    flat-mask ``PruneResult`` to the user-facing result dict.
+    join/filter have bespoke bodies and are not prepared here.
+
+    Encoded columns (``DictColumn``/``RLEColumn``) prune in code space
+    and the completions below materialize decoded values for pass-2
+    *survivors only* (``Column.take`` — the late-materialization
+    contract). The code-space completion rules:
+
+    * DISTINCT dedups codes (the sorted dictionary is a bijection, so
+      code equality == value equality) and decodes the survivors.
+    * TOP-N runs ``top_k`` on codes (sorted dictionary => code order ==
+      value order, and equal values share one code, so the index
+      tie-break matches) and decodes the N winners.
+    * HAVING groups compacted survivor *codes*, aggregates decoded
+      survivor values, and decodes only the qualifying keys (code sort
+      order == value sort order).
+    * SKYLINE compares codes when every column shares one dictionary
+      (per-dimension order isomorphism preserves dominance); otherwise
+      it falls back to the decoded stack.
+    * GROUP BY needs no completion change: the engine's fused decode
+      runs in-scan, so the switch state already holds decoded keys.
     """
     k = spec.kind
     p = dict(spec.params)
     if k == "distinct":
         (cname,) = spec.columns
-        vals = table.cols[cname]
+        col = table.col(cname)
+        stream, enc = _code_stream(col, decode)
         params = dict(d=p["d"], w=p["w"], policy=p.get("policy", "lru"))
         if "seed" in p:
             params["seed"] = p["seed"]
 
         def complete(r):
-            out_mask = core.master_complete_distinct(vals, r.keep)
-            uniq = np.unique(np.asarray(vals)[np.asarray(out_mask)])
+            out_mask = core.master_complete_distinct(stream, r.keep)
+            idx = np.nonzero(np.asarray(out_mask))[0]
+            uniq = np.unique(np.asarray(col.take(idx)))
             return _result(uniq, r.keep)
 
-        return "distinct", (vals,), params, complete
+        return "distinct", (stream,), (enc,), params, complete
     if k == "topn":
         (cname,) = spec.columns
-        vals = table.cols[cname]
+        col = table.col(cname)
+        stream, enc = _code_stream(col, decode)
         if p.get("mode", "rand") == "rand":
             algo, params = "topn_rand", dict(d=p["d"], w=p["w"])
             if "seed" in p:
@@ -127,43 +164,77 @@ def _prepare(spec: QuerySpec, table: Table):
             algo, params = "topn_det", dict(N=p["N"], w=p.get("w", 4))
 
         def complete(r):
-            topv, topi = core.master_complete_topn(vals, r.keep, p["N"])
-            return _result((np.asarray(topv), np.asarray(topi)), r.keep)
+            topv, topi = core.master_complete_topn(stream, r.keep,
+                                                   p["N"])
+            topv, topi = np.asarray(topv), np.asarray(topi)
+            if enc is not None:
+                # decode the N winners via their original rows; slots
+                # filled with NEG (< N survivors) stay NEG
+                real = topv != np.float32(NEG)
+                dec = np.asarray(col.take(topi)).astype(np.float32)
+                topv = np.where(real, dec, np.float32(NEG))
+            return _result((topv, topi), r.keep)
 
-        return algo, (vals,), params, complete
+        return algo, (stream,), (enc,), params, complete
     if k == "having":
         kname, vname = spec.columns
-        keys, vals = table.cols[kname], table.cols[vname]
+        kcol, vcol = table.col(kname), table.col(vname)
+        kstream, kenc = _code_stream(kcol, decode)
+        vstream, venc = _code_stream(vcol, decode)
         params = dict(threshold=p["threshold"], rows=p.get("rows", 3),
                       width=p.get("width", 1024), agg=p.get("agg", "sum"))
         if "seed" in p:
             params["seed"] = p["seed"]
 
         def complete(r):
-            out = core.master_complete_having(keys, vals, r.keep,
+            # compact first: only survivor values are ever decoded
+            kidx = np.nonzero(np.asarray(r.keep))[0]
+            keys = np.asarray(kstream)[kidx]
+            vals = np.asarray(vcol.take(kidx))
+            ones = np.ones(kidx.shape[0], np.bool_)
+            out = core.master_complete_having(keys, vals, ones,
                                               p["threshold"],
                                               p.get("agg", "sum"))
+            if kenc is not None:
+                lut = np.asarray(kenc.lut)
+                out = [lut[c].item() for c in out]  # sorted is preserved
             return _result(out, r.keep)
 
-        return "having", (keys, vals), params, complete
+        return "having", (kstream, vstream), (kenc, venc), params, complete
     if k == "skyline":
-        pts = jnp.stack([table.cols[c] for c in spec.columns], axis=-1)
+        cols = [table.col(c) for c in spec.columns]
+        encs = [c.encoding if isinstance(c, DictColumn) else None
+                for c in cols]
+        # code-space dominance needs ONE dictionary across all D
+        # dimensions (per-dimension order isomorphism); otherwise decode
+        shared = (decode != "eager" and len(encs) > 0
+                  and all(e is not None for e in encs)
+                  and all(e is encs[0] for e in encs))
+        if shared:
+            pts, enc = jnp.stack([c.codes for c in cols], axis=-1), encs[0]
+        else:
+            pts, enc = jnp.stack([c.decoded() for c in cols], axis=-1), None
         params = dict(w=p["w"], score=p.get("score", "aph"))
 
         def complete(r):
+            # dominance is per-dimension >=/>; the shared sorted
+            # dictionary preserves both, so the mask needs no decode
             out = core.master_complete_skyline(pts, r.keep)
             return _result(np.asarray(out), r.keep)
 
-        return "skyline", (pts,), params, complete
+        return "skyline", (pts,), (enc,), params, complete
     if k == "groupby":
         kname, vname = spec.columns
-        keys, vals = table.cols[kname], table.cols[vname]
+        kstream, kenc = _code_stream(table.col(kname), decode)
+        vstream, venc = _code_stream(table.col(vname), decode)
         agg = p.get("agg", "sum")
         params = dict(d=p["d"], w=p["w"], agg=agg)
         if "seed" in p:
             params["seed"] = p["seed"]
 
         def complete(r):
+            # the fused in-scan decode means r.state/r.emitted already
+            # hold decoded keys and values — identical to the plain run
             out = core.master_complete_groupby(r, agg)
             # switch→master traffic = valid evictions + state entries
             ev_ok = np.asarray(r.emitted[2]).ravel()
@@ -171,19 +242,34 @@ def _prepare(spec: QuerySpec, table: Table):
             traffic = jnp.asarray(np.concatenate([ev_ok, st_ok]))
             return _result(out, ~traffic)  # emitted partials = traffic
 
-        return "groupby", (keys, vals), params, complete
+        return "groupby", (kstream, vstream), (kenc, venc), params, complete
     raise KeyError(k)
 
 
 def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data",
-              tune: str = "off", plan_cache=None) -> dict:
+              tune: str | None = None, plan_cache=None,
+              options: ExecOptions | None = None,
+              decode: str | None = None) -> dict:
     """Execute a query with switch pruning; returns output + statistics.
 
     tune: "off" | "cached" | "race" — self-tuned engine plans for the
     single-table pruners (join/filter have bespoke execution paths and
     ignore it). Incompatible with an explicit mesh; results are
     bit-identical across all three settings.
+
+    options / decode: ``ExecOptions`` bundle (tune/plan_cache/decode
+    apply here; mode/shards/pass2/apply_block are the mesh's job at
+    this layer and are rejected). Encoded table columns prune in code
+    space and decode survivors only; ``decode="eager"`` decodes up
+    front instead.
     """
+    opts = ExecOptions.resolve(options, tune=tune, plan_cache=plan_cache,
+                               decode=decode)
+    opts.require_unset("run_query", "mode", "shards", "pass2",
+                       "apply_block")
+    tune = opts.tune if opts.tune is not None else "off"
+    plan_cache = opts.plan_cache
+    decode = opts.decode if opts.decode is not None else "auto"
     _check_tune(tune, mesh)
     k = spec.kind
     p = dict(spec.params)
@@ -192,13 +278,13 @@ def run_query(spec: QuerySpec, tables, mesh=None, axis: str = "data",
     if k == "filter":
         table: Table = tables
         formula = p["formula"]
-        cols = {c: table.cols[c] for c in spec.columns}
+        cols = {c: table.col(c).decoded() for c in spec.columns}
         pr = core.filter_prune(formula, cols, p.get("truthtable", True))
         final = core.master_complete_filter(formula, cols, pr.keep)
         return _result(np.nonzero(np.asarray(final))[0], pr.keep)
-    algo, streams, params, complete = _prepare(spec, tables)
+    algo, streams, encs, params, complete = _prepare(spec, tables, decode)
     return complete(_engine_call(algo, streams, mesh, axis, params,
-                                 tune, plan_cache))
+                                 tune, plan_cache, encoding=encs))
 
 
 def _group_key(spec: QuerySpec):
@@ -227,7 +313,9 @@ def _group_key(spec: QuerySpec):
 
 def run_queries(specs, tables, mesh=None, axis: str = "data",
                 device_budget_bytes: int | None = None,
-                tune: str = "off", plan_cache=None) -> list:
+                tune: str | None = None, plan_cache=None,
+                options: ExecOptions | None = None,
+                decode: str | None = None) -> list:
     """Execute many queries, batching compatible ones into one program.
 
     Specs are grouped by `_group_key` (same algorithm family, columns
@@ -251,6 +339,13 @@ def run_queries(specs, tables, mesh=None, axis: str = "data",
     safety), though a group's masks may differ from a per-query tuned
     serial loop since the group shares one lane count.
     """
+    opts = ExecOptions.resolve(options, tune=tune, plan_cache=plan_cache,
+                               decode=decode)
+    opts.require_unset("run_queries", "mode", "shards", "pass2",
+                       "apply_block")
+    tune = opts.tune if opts.tune is not None else "off"
+    plan_cache = opts.plan_cache
+    decode = opts.decode if opts.decode is not None else "auto"
     _check_tune(tune, mesh)
     specs = list(specs)
     results: list = [None] * len(specs)
@@ -258,36 +353,38 @@ def run_queries(specs, tables, mesh=None, axis: str = "data",
     for i, spec in enumerate(specs):
         key = _group_key(spec)
         if key is None:
-            results[i] = run_query(spec, tables, mesh, axis)
+            results[i] = run_query(spec, tables, mesh, axis,
+                                   decode=decode)
         else:
             groups.setdefault(key, []).append(i)
     for idxs in groups.values():
         if len(idxs) == 1:
             i = idxs[0]
             results[i] = run_query(specs[i], tables, mesh, axis,
-                                   tune, plan_cache)
+                                   tune, plan_cache, decode=decode)
             continue
-        prepped = [_prepare(specs[i], tables) for i in idxs]
-        algo, streams = prepped[0][0], prepped[0][1]
-        queries = [pr[2] for pr in prepped]
+        prepped = [_prepare(specs[i], tables, decode) for i in idxs]
+        algo, streams, encs = prepped[0][0], prepped[0][1], prepped[0][2]
+        queries = [pr[3] for pr in prepped]
         m = streams[0].shape[0]
         if tune != "off":
             tr = core.resolve_plan(algo, streams, queries[0],
                                    tune_mode=tune, cache=plan_cache)
             rb = core.execute_plan_batch(
-                algo, queries, *streams, plan=tr.plan,
+                algo, queries, *streams, plan=tr.plan, encoding=encs,
                 device_budget_bytes=device_budget_bytes)
             keep = rb.keep
         elif mesh is None:
             rb = core.engine_prune_batch(
-                algo, queries, *streams, mode="scan",
+                algo, queries, *streams, mode="scan", encoding=encs,
                 device_budget_bytes=device_budget_bytes)
             keep = rb.keep
         else:
             rb = core.engine_prune_batch(
                 algo, queries, *streams, mode="mesh",
                 shards=mesh.shape[axis], mesh=mesh, mesh_axis=axis,
-                pass2="mesh", device_budget_bytes=device_budget_bytes)
+                pass2="mesh", encoding=encs,
+                device_budget_bytes=device_budget_bytes)
             keep = core.unshard_mask_batch(rb.keep, m)
         w_cap = (max(int(q["w"]) for q in queries)
                  if algo == "groupby" else None)
@@ -309,7 +406,7 @@ def run_queries(specs, tables, mesh=None, axis: str = "data",
                 emitted=(None if rb.emitted is None else
                          jax.tree_util.tree_map(lambda a: a[j],
                                                 rb.emitted)))
-            results[i] = prepped[j][3](rj)
+            results[i] = prepped[j][4](rj)
     return results
 
 
@@ -317,10 +414,16 @@ def _run_join(spec, tables, mesh, axis, p):
     ta, tb = tables
     ka_name, kb_name = spec.columns
     nw = _num_workers(mesh, axis)
+    # the Bloom exchange hashes every key on both sides anyway (no
+    # pass-1 pruning to defer behind), so encoded key columns decode
+    # here; the two tables' dictionaries differ, making code spaces
+    # incomparable across tables
+    ka_full = ta.col(ka_name).decoded()
+    kb_full = tb.col(kb_name).decoded()
     # pad fill = the first key: already a member, so the padded shards
     # build bit-identical Bloom filters and no tail row is dropped
-    ka_st = ta.stacked_shards(nw, fills={ka_name: ta.cols[ka_name][0]})[ka_name]
-    kb_st = tb.stacked_shards(nw, fills={kb_name: tb.cols[kb_name][0]})[kb_name]
+    ka_st = ta.stacked_shards(nw, fills={ka_name: ka_full[0]})[ka_name]
+    kb_st = tb.stacked_shards(nw, fills={kb_name: kb_full[0]})[kb_name]
     nbits, H = p["nbits"], p.get("num_hashes", 3)
 
     def worker(ka, kb):
@@ -345,10 +448,10 @@ def _run_join(spec, tables, mesh, axis, p):
     na, nb = min(ta.num_rows, keep_a.shape[0]), min(tb.num_rows,
                                                     keep_b.shape[0])
     keep_a, keep_b = keep_a[:na], keep_b[:nb]
-    va = ta.cols[p.get("payload_a", ka_name)][:na]
-    vb = tb.cols[p.get("payload_b", kb_name)][:nb]
-    out = core.master_complete_join(ta.cols[ka_name][:na], va, keep_a,
-                                    tb.cols[kb_name][:nb], vb, keep_b)
+    va = ta.col(p.get("payload_a", ka_name)).decoded()[:na]
+    vb = tb.col(p.get("payload_b", kb_name)).decoded()[:nb]
+    out = core.master_complete_join(ka_full[:na], va, keep_a,
+                                    kb_full[:nb], vb, keep_b)
     stats_keep = jnp.concatenate([keep_a, keep_b])
     return _result(out, stats_keep)
 
@@ -357,6 +460,9 @@ def _result(output, keep) -> dict:
     keepf = jnp.asarray(keep).astype(jnp.float32)
     return {
         "output": output,
+        # the pass-1 survivor mask: feed it to Table.gather_decoded to
+        # materialize only surviving rows of encoded columns
+        "keep": jnp.asarray(keep),
         "forwarded": int(keepf.sum()),
         "total": int(keepf.shape[0]),
         "pruned_fraction": float(1 - keepf.mean()),

@@ -1,37 +1,189 @@
-"""Columnar tables + benchmark-like data generators.
+"""Columnar tables + typed column encodings + benchmark generators.
 
 Mirrors the paper's evaluation data: the running Products/Ratings example
 (Table 1), and BigData-benchmark-like `uservisits` / `rankings` tables
-(§8.1). Columns are flat jnp arrays; string-ish columns are dictionary
-encoded to uint32 ids (the CWorker's fingerprint/serialize step).
+(§8.1). Columns are flat jnp arrays or typed column objects:
+
+``PlainColumn``
+    A decoded flat array (what raw arrays in ``cols`` are wrapped as).
+
+``DictColumn``
+    uint32 codes + a sorted-dictionary ``core.encoding.DictEncoding``.
+    ``code_stream()`` hands the engine the codes and the descriptor, so
+    pass 1 prunes in code space with the decode gather fused in; only
+    pass-2 survivors are materialized (``Table.gather_decoded``).
+
+``RLEColumn``
+    Run values + int32 run lengths (optionally dictionary-coded run
+    values). ``code_stream()`` expands to the flat layout for the
+    generic engine; run-*level* pruning without expansion lives in
+    ``kernels.ops.rle_*``.
+
+All layouts are flat jnp arrays under the hood, so ``shard`` /
+``stacked_shards`` / ``core.engine.shard_stack`` keep working on the
+decoded view.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.encoding import (DictEncoding, dict_encode, rle_encode,
+                                 rle_expand)
 from repro.core.engine import shard_stack
+
+
+@dataclasses.dataclass(frozen=True)
+class PlainColumn:
+    """A decoded flat column (the identity encoding)."""
+
+    values: jnp.ndarray
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.values.shape[0])
+
+    def code_stream(self):
+        """(engine stream, encoding descriptor or None)."""
+        return self.values, None
+
+    def decoded(self) -> jnp.ndarray:
+        return self.values
+
+    def take(self, idx) -> jnp.ndarray:
+        """Decoded rows at ``idx`` (late materialization entry point)."""
+        return jnp.take(self.values, jnp.asarray(idx), axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DictColumn:
+    """Dictionary-encoded column: ``decoded = encoding.lut[codes]``."""
+
+    codes: jnp.ndarray        # uint32[m]
+    encoding: DictEncoding
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.codes.shape[0])
+
+    def code_stream(self):
+        return self.codes, self.encoding
+
+    def decoded(self) -> jnp.ndarray:
+        return self.encoding.decode(self.codes)
+
+    def take(self, idx) -> jnp.ndarray:
+        # gather the *codes* first: only |idx| dictionary lookups happen
+        return self.encoding.decode(
+            jnp.take(self.codes, jnp.asarray(idx), axis=0))
+
+
+@dataclasses.dataclass(frozen=True)
+class RLEColumn:
+    """Run-length-encoded column: ``run_values`` repeated ``run_lengths``.
+
+    ``encoding`` optionally dictionary-codes the run values themselves
+    (RLE-over-dictionary, the common Parquet layout); ``code_stream``
+    then expands to flat *codes* and pass 1 still never touches a
+    decoded value.
+    """
+
+    run_values: jnp.ndarray   # [R]
+    run_lengths: jnp.ndarray  # int32[R]
+    encoding: DictEncoding | None = None
+
+    @property
+    def num_rows(self) -> int:
+        return int(np.asarray(self.run_lengths).sum())
+
+    @property
+    def num_runs(self) -> int:
+        return int(self.run_values.shape[0])
+
+    def code_stream(self):
+        flat = rle_expand(self.run_values, self.run_lengths,
+                          total=self.num_rows)
+        return flat, self.encoding
+
+    def decoded(self) -> jnp.ndarray:
+        flat, enc = self.code_stream()
+        return flat if enc is None else enc.decode(flat)
+
+    def take(self, idx) -> jnp.ndarray:
+        return jnp.take(self.decoded(), jnp.asarray(idx), axis=0)
+
+
+Column = PlainColumn | DictColumn | RLEColumn
+
+
+def as_column(v) -> "PlainColumn | DictColumn | RLEColumn":
+    """Wrap a raw array as PlainColumn; pass typed columns through."""
+    if isinstance(v, (PlainColumn, DictColumn, RLEColumn)):
+        return v
+    return PlainColumn(values=v)
+
+
+def dict_column(values) -> DictColumn:
+    codes, enc = dict_encode(values)
+    return DictColumn(codes=codes, encoding=enc)
+
+
+def rle_column(values, dictionary: bool = False) -> RLEColumn:
+    rv, rl = rle_encode(values)
+    if not dictionary:
+        return RLEColumn(run_values=rv, run_lengths=rl)
+    codes, enc = dict_encode(rv)
+    return RLEColumn(run_values=codes, run_lengths=rl, encoding=enc)
 
 
 @dataclasses.dataclass
 class Table:
     name: str
-    cols: dict  # str -> jnp.ndarray [m]
+    cols: dict  # str -> jnp.ndarray [m] or PlainColumn/DictColumn/RLEColumn
 
     @property
     def num_rows(self) -> int:
-        return int(next(iter(self.cols.values())).shape[0])
+        return as_column(next(iter(self.cols.values()))).num_rows
+
+    def col(self, name: str) -> "PlainColumn | DictColumn | RLEColumn":
+        """The typed column object (raw arrays wrapped as PlainColumn)."""
+        return as_column(self.cols[name])
+
+    def decoded_cols(self) -> dict:
+        return {k: as_column(v).decoded() for k, v in self.cols.items()}
+
+    def encode(self, *names: str, rle: bool = False) -> "Table":
+        """A new Table with ``names`` dictionary- (or RLE-) encoded."""
+        cols = dict(self.cols)
+        for n in names:
+            cols[n] = (rle_column(np.asarray(as_column(cols[n]).decoded()),
+                                  dictionary=True) if rle
+                       else dict_column(as_column(cols[n]).decoded()))
+        return Table(self.name, cols)
+
+    def gather_decoded(self, keep) -> dict:
+        """Materialize only the surviving rows of every column.
+
+        ``keep`` is a bool[m] mask (an engine keep mask) or an index
+        array; encoded columns decode just the |survivors| gathered
+        codes — the late-materialization contract.
+        """
+        keep = np.asarray(keep)
+        idx = np.nonzero(keep)[0] if keep.dtype == np.bool_ else keep
+        return {k: as_column(v).take(idx) for k, v in self.cols.items()}
 
     def shard(self, num: int) -> list["Table"]:
         """Partition rows round-robin into `num` worker shards (equal size)."""
         m = self.num_rows
         per = m // num
+        cols = self.decoded_cols()
         out = []
         for i in range(num):
             out.append(Table(f"{self.name}[{i}]",
-                             {k: v[i * per:(i + 1) * per] for k, v in self.cols.items()}))
+                             {k: v[i * per:(i + 1) * per] for k, v in cols.items()}))
         return out
 
     def stacked_shards(self, num: int, fills: dict | None = None) -> dict:
@@ -39,17 +191,24 @@ class Table:
         shared with ``core.engine.shard_stack``.
 
         Without ``fills`` the legacy truncating layout is kept
-        (per = m//num, tail rows dropped). With ``fills`` (col -> pad
+        (per = m//num, tail rows dropped) — deprecated: it silently
+        loses the ``m % num`` tail rows. With ``fills`` (col -> pad
         value) columns are tail-padded to per = ceil(m/num) instead, so
         no row is lost; callers must pick algorithm-safe fills and
         slice any per-row result back to ``num_rows``.
         """
+        cols = self.decoded_cols()
         if fills is not None:
             return {k: shard_stack(v, num, fills.get(k, 0))
-                    for k, v in self.cols.items()}
+                    for k, v in cols.items()}
+        warnings.warn(
+            "Table.stacked_shards without fills= uses the legacy "
+            "truncating layout and silently drops the m % num tail "
+            "rows; pass fills= for the padded, lossless layout",
+            DeprecationWarning, stacklevel=2)
         m = self.num_rows
         per = m // num
-        return {k: v[:num * per].reshape(num, per) for k, v in self.cols.items()}
+        return {k: v[:num * per].reshape(num, per) for k, v in cols.items()}
 
 
 def make_products_ratings() -> tuple[Table, Table]:

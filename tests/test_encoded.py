@@ -1,0 +1,312 @@
+"""Encoded-column pruning: bit-identity with the eagerly decoded path.
+
+The contract under test (docs/ARCHITECTURE.md "Prune before decode"):
+with the decode gather fused into the pass-1/pass-2 bodies, every
+algorithm in every execution mode produces a keep mask *bit-identical*
+to scanning the eagerly decoded stream — the decoded column is simply
+never materialized. Plus the RLE run-level kernels, the ExecOptions
+resolution rules, the `repro` top-level surface, and the deprecated
+truncating `Table.stacked_shards` layout.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from hypstub import HAS_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.core import planner
+from repro.core.distinct import distinct_prune as seq_distinct
+from repro.core.encoding import (DictEncoding, dict_encode, rle_encode,
+                                 rle_expand)
+from repro.core.engine import (default_mesh, engine_prune,
+                               engine_prune_batch, execute_plan)
+from repro.core.options import ExecOptions
+from repro.core.streaming import PruneStream
+from repro.core.topn import topn_det_prune
+from repro.kernels.ops import (rle_distinct_prune, rle_expand_mask,
+                               rle_topn_prune)
+from repro.query.engine import QuerySpec, run_query
+from repro.query.tables import Table, dict_column, rle_column
+
+M = 997          # ragged: m % shards != 0 exercises pad fills
+SHARDS = 8
+
+PARAMS = {
+    "topn_det": dict(N=50, w=8),
+    "topn_rand": dict(d=128, w=4),
+    "distinct": dict(d=64, w=4),
+    "skyline": dict(w=8),
+    "groupby": dict(d=16, w=4, agg="sum"),
+    "having": dict(threshold=40, rows=3, width=512, agg="count"),
+}
+
+
+def _streams(algo, rng, m=M):
+    """Low-cardinality data so dictionaries actually compress."""
+    if algo in ("topn_det", "topn_rand"):
+        return (rng.choice(rng.random(97).astype(np.float32) * 1e4 + 1, m),)
+    if algo == "distinct":
+        return (rng.integers(1, 80, m).astype(np.uint32),)
+    if algo == "skyline":
+        return (rng.integers(0, 40, (m, 3)).astype(np.float32),)
+    return (rng.integers(0, 64, m).astype(np.uint32),
+            rng.integers(1, 50, m).astype(np.int32))
+
+
+def _encode(streams):
+    pairs = [dict_encode(s) for s in streams]
+    return tuple(p[0] for p in pairs), tuple(p[1] for p in pairs)
+
+
+MODES = [("scan", None), ("two_pass", None), ("mesh", "master"),
+         ("mesh", "mesh")]
+
+
+@pytest.mark.parametrize("mode,pass2", MODES,
+                         ids=[f"{m}-{p or 'na'}" for m, p in MODES])
+@pytest.mark.parametrize("algo", list(PARAMS))
+def test_one_shot_bit_identity(algo, mode, pass2, rng):
+    streams = _streams(algo, rng)
+    codes, encs = _encode(streams)
+    kw = dict(mode=mode, shards=SHARDS, **PARAMS[algo])
+    if mode == "mesh":
+        kw.update(mesh=default_mesh("shards"), pass2=pass2)
+    want = engine_prune(algo, *streams, **kw)
+    got = engine_prune(algo, *codes, encoding=encs, **kw)
+    assert np.array_equal(np.asarray(want.keep), np.asarray(got.keep))
+    if algo == "groupby":
+        assert np.array_equal(np.asarray(want.emitted),
+                              np.asarray(got.emitted))
+
+
+@pytest.mark.parametrize("mode,pass2", MODES,
+                         ids=[f"{m}-{p or 'na'}" for m, p in MODES])
+def test_batched_bit_identity(mode, pass2, rng):
+    streams = _streams("topn_det", rng)
+    codes, encs = _encode(streams)
+    queries = [dict(N=n, w=8) for n in (10, 50, 200)]
+    kw = dict(mode=mode, shards=SHARDS)
+    if mode == "mesh":
+        kw.update(mesh=default_mesh("shards"), pass2=pass2)
+    want = engine_prune_batch("topn_det", queries, *streams, **kw)
+    got = engine_prune_batch("topn_det", queries, *codes,
+                             encoding=encs, **kw)
+    assert np.array_equal(np.asarray(want.keep), np.asarray(got.keep))
+
+
+def test_batched_groupby_bit_identity(rng):
+    streams = _streams("groupby", rng)
+    codes, encs = _encode(streams)
+    queries = [dict(d=16, w=4, agg="sum"), dict(d=8, w=4, agg="sum")]
+    for kw in (dict(mode="two_pass", shards=SHARDS),
+               dict(mode="mesh", shards=SHARDS,
+                    mesh=default_mesh("shards"))):
+        want = engine_prune_batch("groupby", queries, *streams, **kw)
+        got = engine_prune_batch("groupby", queries, *codes,
+                                 encoding=encs, **kw)
+        assert np.array_equal(np.asarray(want.keep), np.asarray(got.keep))
+
+
+@pytest.mark.parametrize("algo", ["topn_det", "having", "groupby"])
+def test_streaming_bit_identity(algo, rng):
+    sizes = [300, 257, 301, 139]
+    streams = _streams(algo, rng, m=sum(sizes))
+    codes, encs = _encode(streams)
+
+    def drain(srcs, **kw):
+        s = PruneStream(algo, shards=SHARDS, merge_every=2,
+                        **kw, **PARAMS[algo])
+        lo = 0
+        for b in sizes:
+            s.fold(*(x[lo:lo + b] for x in srcs))
+            lo += b
+        return s.close()
+
+    want = drain(streams)
+    got = drain(codes, encoding=encs)
+    assert np.array_equal(np.asarray(want.keep), np.asarray(got.keep))
+    assert np.array_equal(np.asarray(want.live_keep),
+                          np.asarray(got.live_keep))
+    # decode="eager" escape hatch: decodes up front, same result again
+    eager = drain(codes, encoding=encs, decode="eager")
+    assert np.array_equal(np.asarray(want.keep), np.asarray(eager.keep))
+
+
+def test_same_plan_identity(rng):
+    """Tuned execution contract: the *plan* is the semantic input.
+
+    Plan RESOLUTION on code streams may pick a different plan than on
+    decoded streams (calibration measures uint32 merge costs); but any
+    given plan executed on codes+encoding is bit-identical to the same
+    plan on the decoded stream.
+    """
+    streams = _streams("topn_det", rng)
+    codes, encs = _encode(streams)
+    for plan in (planner.Plan(mode="two_pass", shards=4, pass2="master"),
+                 planner.Plan(mode="two_pass", shards=8, pass2="master"),
+                 planner.Plan(mode="mesh", shards=8, pass2="mesh",
+                              num_devices=4)):
+        want = execute_plan("topn_det", *streams, plan=plan,
+                            **PARAMS["topn_det"])
+        got = execute_plan("topn_det", *codes, plan=plan, encoding=encs,
+                           **PARAMS["topn_det"])
+        assert np.array_equal(np.asarray(want.keep), np.asarray(got.keep))
+
+
+# ------------------------------------------------------------------ RLE
+def test_rle_round_trip_edges():
+    for v in ([5], [1, 1, 1, 1], [1, 2, 3, 4], [7, 7, 3, 3, 3, 9],
+              list(np.repeat([4, 1, 4], [3, 1, 9]))):
+        arr = jnp.asarray(np.asarray(v, np.int32))
+        rv, rl = rle_encode(arr)
+        assert int(np.asarray(rl).sum()) == len(v)
+        assert np.array_equal(np.asarray(rle_expand(rv, rl)), v)
+    rv, rl = rle_encode(jnp.zeros((0,), jnp.int32))
+    assert rv.shape == (0,) and rl.shape == (0,)
+
+
+@pytest.mark.parametrize("use_ref", [True, False], ids=["ref", "kernel"])
+@pytest.mark.parametrize("neg", [False, True], ids=["pos", "withneg"])
+def test_rle_topn_matches_expanded(use_ref, neg, rng):
+    m, N, w = 1000, 16, 4
+    v = np.repeat(rng.integers(1, 60, m // 5).astype(np.float32), 5)
+    if neg:
+        v = v - 30.0  # t0 <= 0: ladder is NOT a prefix in level index
+    rv, rl = rle_encode(jnp.asarray(v))
+    want = np.asarray(topn_det_prune(jnp.asarray(v), N=N, w=w).keep)
+    head, tstar = rle_topn_prune(rv, rl, N=N, w=w, block=64,
+                                 use_ref=use_ref)
+    got = np.asarray(rle_expand_mask(head, tstar, rl, m))
+    assert np.array_equal(got, want)
+    # single run / all-distinct extremes
+    for vv in (np.full(300, 7.0, np.float32),
+               np.arange(1, 301, dtype=np.float32)):
+        rv, rl = rle_encode(jnp.asarray(vv))
+        head, tstar = rle_topn_prune(rv, rl, N=N, w=w, block=64,
+                                     use_ref=use_ref)
+        got = np.asarray(rle_expand_mask(head, tstar, rl, vv.shape[0]))
+        want = np.asarray(topn_det_prune(jnp.asarray(vv), N=N, w=w).keep)
+        assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("policy", ["lru", "fifo"])
+def test_rle_distinct_matches_expanded(policy, rng):
+    vals = np.repeat(rng.integers(0, 40, 400).astype(np.uint32), 3)
+    rv, rl = rle_encode(jnp.asarray(vals))
+    want = np.asarray(seq_distinct(jnp.asarray(vals), d=16, w=2,
+                                   policy=policy).keep)
+    rk = rle_distinct_prune(rv, d=16, w=2, policy=policy)
+    got = np.asarray(rle_expand_mask(rk, None, rl, vals.shape[0]))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=9),
+                min_size=1, max_size=120),
+       st.integers(min_value=1, max_value=20))
+def test_rle_topn_property(vals, N):
+    """Random duplicate-heavy streams: kernel == expanded scan."""
+    v = np.asarray(vals, np.float32)
+    rv, rl = rle_encode(jnp.asarray(v))
+    head, tstar = rle_topn_prune(rv, rl, N=N, w=4, block=16, use_ref=True)
+    got = np.asarray(rle_expand_mask(head, tstar, rl, v.shape[0]))
+    want = np.asarray(topn_det_prune(jnp.asarray(v), N=N, w=4).keep)
+    assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------------- ExecOptions
+def test_options_equivalent_to_kwargs(rng):
+    streams = _streams("topn_det", rng)
+    a = engine_prune("topn_det", *streams, mode="two_pass", shards=4,
+                     **PARAMS["topn_det"])
+    b = engine_prune("topn_det", *streams,
+                     options=ExecOptions(mode="two_pass", shards=4),
+                     **PARAMS["topn_det"])
+    assert np.array_equal(np.asarray(a.keep), np.asarray(b.keep))
+
+
+def test_options_conflict_warns(rng):
+    streams = _streams("topn_det", rng)
+    opts = ExecOptions(mode="two_pass", shards=4)
+    with pytest.warns(UserWarning, match="options= wins"):
+        r = engine_prune("topn_det", *streams, options=opts, mode="scan",
+                         **PARAMS["topn_det"])
+    want = engine_prune("topn_det", *streams, mode="two_pass", shards=4,
+                        **PARAMS["topn_det"])
+    assert np.array_equal(np.asarray(r.keep), np.asarray(want.keep))
+
+
+def test_options_validation():
+    with pytest.raises(ValueError, match="decode"):
+        ExecOptions(decode="nope")
+    with pytest.raises(TypeError, match="ExecOptions"):
+        ExecOptions.resolve({"mode": "scan"})
+    # non-applicable knobs are rejected, not ignored
+    with pytest.raises(ValueError, match="does not accept"):
+        PruneStream("topn_det", options=ExecOptions(mode="mesh"),
+                    shards=2, N=4, w=4)
+    with pytest.raises(ValueError, match="does not accept"):
+        engine_prune_batch("topn_det", [dict(N=4, w=4)],
+                           jnp.arange(8, dtype=jnp.float32) + 1,
+                           options=ExecOptions(tune="race"))
+    with pytest.raises(ValueError, match="does not accept"):
+        run_query(QuerySpec("distinct", ("x",), dict(d=8, w=2)),
+                  Table("t", {"x": jnp.arange(8, dtype=jnp.uint32)}),
+                  options=ExecOptions(mode="mesh"))
+
+
+def test_top_level_surface():
+    import repro
+    for name in ("engine_prune", "engine_prune_stream", "run_query",
+                 "run_queries", "QuerySpec", "Table", "ExecOptions",
+                 "PlanCache"):
+        assert name in repro.__all__ and hasattr(repro, name)
+
+
+# --------------------------------------------------- tables / query layer
+def test_query_layer_encoded_identity(rng):
+    t = Table("v", {"ip": jnp.asarray(
+        rng.integers(0, 50, 500).astype(np.uint32))})
+    spec = QuerySpec("distinct", ("ip",), dict(d=32, w=4))
+    want = run_query(spec, t)
+    got = run_query(spec, t.encode("ip"))
+    got_rle = run_query(spec, t.encode("ip", rle=True))
+    assert np.array_equal(np.asarray(want["keep"]), np.asarray(got["keep"]))
+    assert np.array_equal(np.asarray(want["keep"]),
+                          np.asarray(got_rle["keep"]))
+    assert (sorted(np.asarray(want["output"]).tolist())
+            == sorted(np.asarray(got["output"]).tolist()))
+
+
+def test_gather_decoded_late_materialization(rng):
+    vals = rng.integers(0, 30, 200).astype(np.uint32)
+    t = Table("t", {"k": dict_column(vals),
+                    "r": rle_column(np.sort(vals), dictionary=True)})
+    keep = np.zeros(200, bool)
+    keep[[3, 17, 99]] = True
+    out = t.gather_decoded(keep)
+    assert np.array_equal(np.asarray(out["k"]), vals[keep])
+    assert np.array_equal(np.asarray(out["r"]), np.sort(vals)[keep])
+
+
+def test_stacked_shards_deprecation_and_no_rows_lost(rng):
+    t = Table("t", {"x": jnp.asarray(
+        rng.integers(1, 9, 13).astype(np.uint32))})
+    with pytest.warns(DeprecationWarning, match="truncating"):
+        legacy = t.stacked_shards(4)
+    assert legacy["x"].shape == (4, 3)  # 13 % 4 tail rows dropped
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        padded = t.stacked_shards(4, fills={"x": 0})
+    assert padded["x"].shape == (4, 4)  # lossless: ceil(13/4)
+    # end to end: a mesh run over the ragged table loses no rows — the
+    # padded shard_stack layout, not the deprecated truncating one
+    spec = QuerySpec("distinct", ("x",), dict(d=8, w=8))
+    meshless = run_query(spec, t)
+    meshed = run_query(spec, t, mesh=default_mesh("data"), axis="data")
+    assert np.asarray(meshed["keep"]).shape[0] == 13
+    assert (sorted(np.asarray(meshed["output"]).tolist())
+            == sorted(np.asarray(meshless["output"]).tolist()))
